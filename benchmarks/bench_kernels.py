@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks (interpret mode on CPU: correctness-representative
+timings for the XLA-path oracle vs the blocked formulation; real TPU wall
+times require hardware).  Emits name,us_per_call,derived rows."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench(fast: bool = True):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # scheduler routing at fleet scale
+    m, b = (4096, 512) if fast else (65536, 8192)
+    wl = jnp.asarray(rng.uniform(0, 50, m), jnp.float32)
+    er = jnp.asarray(np.tile([0.5, 0.45, 0.25], (m, 1)), jnp.float32)
+    sr = jnp.asarray(np.arange(m) // 64, jnp.int32)
+    tl = jnp.sort(jnp.asarray(
+        rng.integers(0, m, (b, 3)), jnp.int32), axis=1)
+    us_ref = _time(jax.jit(lambda *a: ref.wwl_route(*a)), wl, er, sr, tl)
+    rows.append(("wwl_route_ref_xla", us_ref, f"M={m},B={b}"))
+    us_k = _time(lambda *a: ops.wwl_route(*a), wl, er, sr, tl)
+    rows.append(("wwl_route_pallas_interp", us_k, f"M={m},B={b}"))
+
+    q = jnp.asarray(rng.integers(0, 5, m), jnp.float32)
+    ids = jnp.asarray(rng.choice(m, b, replace=False), jnp.int32)
+    er2 = jnp.asarray(np.tile([0.5, 0.45, 0.25], (b, 1)), jnp.float32)
+    us = _time(jax.jit(lambda *a: ref.maxweight_claim(*a)), q, sr, ids,
+               sr[ids], er2)
+    rows.append(("maxweight_ref_xla", us, f"N={m},B={b}"))
+
+    # attention: XLA einsum vs flash (interpret)
+    t = 1024 if fast else 4096
+    qq = jnp.asarray(rng.normal(size=(1, 4, t, 64)), jnp.bfloat16)
+    kk = jnp.asarray(rng.normal(size=(1, 2, t, 64)), jnp.bfloat16)
+    vv = jnp.asarray(rng.normal(size=(1, 2, t, 64)), jnp.bfloat16)
+    us = _time(jax.jit(lambda a, b, c: ref.mha(a, b, c)), qq, kk, vv)
+    rows.append(("attention_ref_xla", us, f"T={t}"))
+
+    # ssd: chunked jnp vs sequential-scan oracle
+    from repro.models.ssm_ops import ssd_chunked_jnp
+    bt = 512 if fast else 4096
+    x = jnp.asarray(rng.normal(size=(1, bt, 4, 32)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.01, 0.2, (1, bt, 4)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(1, bt, 32)) * 0.3, jnp.float32)
+    cc = jnp.asarray(rng.normal(size=(1, bt, 32)) * 0.3, jnp.float32)
+    us_seq = _time(jax.jit(lambda *z: ref.ssd(*z)[0]), x, a, bb, cc)
+    rows.append(("ssd_sequential_scan", us_seq, f"T={bt}"))
+    us_chk = _time(jax.jit(lambda *z: ssd_chunked_jnp(*z)[0]), x, a, bb, cc)
+    rows.append(("ssd_chunked_dual", us_chk,
+                 f"T={bt},speedup={us_seq / max(us_chk, 1e-9):.1f}x"))
+    return rows

@@ -1,0 +1,62 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun/*.json)
+and renders the per-(arch x shape x mesh) three-term table for
+EXPERIMENTS.md §Roofline.  Run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_cells(mesh: str = "16_16"):
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def table(mesh: str = "16_16") -> str:
+    cells = load_cells(mesh)
+    if not cells:
+        return f"(no dry-run artifacts for mesh {mesh}; run repro.launch.dryrun)"
+    lines = [
+        "| arch | shape | fits16GB | compute_s | memory_s | collective_s "
+        "| dominant | useful_flops | roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["status"] == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | "
+                         f"skip | — | — |")
+            continue
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | FAILED | | | | | | |")
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} "
+            f"| {'yes' if m['fits_16gb'] else 'NO'} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_flops_fraction']:.1%} "
+            f"| {r['roofline_fraction']:.1%} |")
+    return "\n".join(lines)
+
+
+def bench(fast: bool = True):
+    rows = []
+    for mesh in ("16_16", "2_16_16"):
+        for c in load_cells(mesh):
+            if c.get("status") != "ok":
+                continue
+            r = c["roofline"]
+            rows.append((f"roofline_{c['arch']}_{c['shape']}_{mesh}",
+                         r["bound_s"] * 1e6,
+                         f"dom={r['dominant']},roof={r['roofline_fraction']:.3f}"))
+    return rows

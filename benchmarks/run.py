@@ -1,0 +1,83 @@
+"""Benchmark orchestrator: one section per paper table/figure plus kernel,
+serving, and roofline benches.  Prints ``name,us_per_call,derived`` CSV and
+writes figure data to experiments/figures/*.csv.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale horizons (slow on 1 CPU core)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig2,fig34,fig56,kernels,"
+                         "serving,roofline")
+    args = ap.parse_args()
+    fast = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import bench_kernels, bench_roofline, bench_serving
+    from benchmarks import figures
+
+    outdir = Path("experiments/figures")
+    outdir.mkdir(parents=True, exist_ok=True)
+    csv_rows = []
+    fig_rows = []
+
+    def section(name, fn):
+        if only and name not in only:
+            return
+        t0 = time.time()
+        rows = fn()
+        dt = time.time() - t0
+        print(f"# {name} ({dt:.1f}s)", file=sys.stderr)
+        if rows and isinstance(rows[0], dict):
+            fig_rows.extend(rows)
+            # summarize per figure/algo: worst-case delay
+            import collections
+            worst = collections.defaultdict(float)
+            for r in rows:
+                worst[(r["figure"], r["algo"])] = max(
+                    worst[(r["figure"], r["algo"])], r["mean_delay"])
+            for (fig, algo), d in sorted(worst.items()):
+                csv_rows.append((f"{fig}_{algo}_worst_delay_slots",
+                                 d * 1e6, "delay(slots)*1e6=us@1us-slot"))
+        else:
+            csv_rows.extend(rows)
+
+    section("fig1", lambda: figures.fig1_precise(fast))
+    section("fig2", lambda: figures.fig2_highload(fast))
+    section("fig34", lambda: figures.fig34_under(fast))
+    section("fig56", lambda: figures.fig56_over(fast))
+    section("kernels", lambda: bench_kernels.bench(fast))
+    section("serving", lambda: bench_serving.bench(fast))
+    section("roofline", lambda: bench_roofline.bench(fast))
+
+    if fig_rows:
+        keys = sorted({k for r in fig_rows for k in r})
+        with open(outdir / "figures.csv", "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(fig_rows)
+        claims = figures.headline_claims(fig_rows)
+        for k, v in claims.items():
+            csv_rows.append((f"claim_{k}", 1.0 if v else 0.0, str(v)))
+        print(f"# wrote {outdir / 'figures.csv'} ({len(fig_rows)} rows); "
+              f"claims: {claims}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Inject the generated roofline tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from benchmarks.bench_roofline import table
+
+
+def main() -> None:
+    path = Path("EXPERIMENTS.md")
+    text = path.read_text()
+    single = table("16_16")
+    multi = table("2_16_16")
+    text = re.sub(
+        r"<!-- ROOFLINE_SINGLE -->(?:.|\n)*?(?=\n### Multi-pod)",
+        f"<!-- ROOFLINE_SINGLE -->\n\n{single}\n",
+        text)
+    text = re.sub(
+        r"<!-- ROOFLINE_MULTI -->(?:.|\n)*?(?=\n## §Perf)",
+        f"<!-- ROOFLINE_MULTI -->\n\n{multi}\n",
+        text)
+    path.write_text(text)
+    print("EXPERIMENTS.md roofline tables updated")
+
+
+if __name__ == "__main__":
+    main()

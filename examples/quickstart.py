@@ -1,0 +1,69 @@
+"""Quickstart: the paper's result in 60 seconds, on all three layers.
+
+1. Queueing layer — Balanced-PANDAS vs JSQ-MaxWeight under rate
+   mis-estimation (the paper's core experiment, reduced horizon).
+2. Kernel layer — the batched routing kernel vs its oracle.
+3. Framework layer — 20 training steps of a small LM fed by the
+   locality-aware data pipeline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+
+def main() -> None:
+    # --- 1. the paper's robustness experiment (reduced) --------------------
+    from repro.core import locality as loc, simulator as sim
+    cfg = sim.default_config(horizon=8000, warmup=2000)
+    cap = loc.capacity_hot_rack(cfg.topo, cfg.true_rates, cfg.p_hot)
+    lam = 0.95 * cap
+    print(f"== queueing: M={cfg.topo.num_servers}, capacity={cap:.1f} "
+          f"tasks/slot, load=0.95 ==")
+    for algo in ("balanced_pandas", "jsq_maxweight"):
+        row = [algo]
+        for mode, eps, sign in (("network", 0.0, -1),
+                                ("per_server", 0.3, -1),
+                                ("per_server", 0.3, +1)):
+            est = sim.make_estimates(cfg, mode, eps, sign, seed=7)
+            out = sim.simulate(algo, cfg, lam, est, seed=0)
+            row.append(f"{out['mean_delay']:6.2f}")
+        print(f"  {row[0]:16s} delay: exact={row[1]} -30%={row[2]} "
+              f"+30%={row[3]}  (slots)")
+    print("  -> Balanced-PANDAS holds its delay under mis-estimated rates.")
+
+    # --- 2. the routing kernel ----------------------------------------------
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    m, b = 1024, 128
+    wl = jnp.asarray(rng.uniform(0, 50, m), jnp.float32)
+    er = jnp.asarray(np.tile([0.5, 0.45, 0.25], (m, 1)), jnp.float32)
+    sr = jnp.asarray(np.arange(m) // 32, jnp.int32)
+    tl = jnp.sort(jnp.asarray(rng.integers(0, m, (b, 3)), jnp.int32), 1)
+    s_k, t_k, _ = ops.wwl_route(wl, er, sr, tl)
+    s_r, t_r, _ = ref.wwl_route(wl, er, sr, tl)
+    assert (np.asarray(s_k) == np.asarray(s_r)).all()
+    print(f"== kernel: wwl_route({b} tasks x {m} servers) matches oracle; "
+          f"locality mix {np.bincount(np.asarray(t_k), minlength=3)} ==")
+
+    # --- 3. training through the locality-aware pipeline --------------------
+    from repro.configs import registry, runtime
+    from repro.launch import mesh as mesh_lib
+    from repro.train.trainer import Trainer, TrainerConfig
+    cfg_m = registry.get_smoke_config("granite_moe_1b")
+    mesh = mesh_lib.make_test_mesh((1, 1), ("data", "model"))
+    plan = runtime.plan_for(cfg_m, "train_4k", "train", dp_axes=("data",))
+    tr = Trainer(cfg_m, TrainerConfig(seq_len=64, global_batch=4, steps=20,
+                                      log_every=5), mesh, plan)
+    hist = tr.run()
+    print("== training (granite-moe smoke config, locality-aware pipeline) ==")
+    for h in hist:
+        print(f"  step {h['step']:3d} loss {h['loss']:.3f} "
+              f"locality(l/r/rem)={tuple(round(x, 2) for x in h['data_locality'])}")
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Assigned-architecture registry: exact public configs, selectable via
+``--arch <id>``.  Sources per the assignment sheet (hf / arXiv tiers).
+
+Each <id>.py module defines ``CONFIG`` (exact) and ``smoke_config()``
+(reduced same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "chatglm3_6b",
+    "gemma3_1b",
+    "codeqwen15_7b",
+    "gemma2_2b",
+    "internvl2_2b",
+    "jamba15_large",
+    "whisper_medium",
+    "mixtral_8x22b",
+    "granite_moe_1b",
+    "mamba2_13b",
+)
+
+# Canonical external names <-> module ids.
+ALIASES = {
+    "chatglm3-6b": "chatglm3_6b",
+    "gemma3-1b": "gemma3_1b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "gemma2-2b": "gemma2_2b",
+    "internvl2-2b": "internvl2_2b",
+    "jamba-1.5-large-398b": "jamba15_large",
+    "whisper-medium": "whisper_medium",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "mamba2-1.3b": "mamba2_13b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_resolve(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_resolve(arch)}")
+    return mod.smoke_config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def _resolve(arch: str) -> str:
+    arch = ALIASES.get(arch, arch)
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return arch

@@ -1,0 +1,51 @@
+"""Per-(arch x shape) runtime plans: parallelism policy + memory knobs.
+
+The defaults implement the memory policy of DESIGN.md §6:
+  - training always FSDPs parameters over the data axis (ZeRO-3) — per-layer
+    all-gathers amortize inside the stage scans;
+  - the >=100B archs (jamba, mixtral) keep optimizer moments (and jamba's
+    grad-accumulator) in bf16 and use deep microbatching;
+  - serving FSDPs weights only where TP-only would not fit 16 GB/chip;
+  - long_500k turns on KV-cache sequence sharding (SP) — the batch=1 cell
+    leaves the DP axes idle, the half-million-token cache does not.
+"""
+
+from __future__ import annotations
+
+from repro.launch.steps import RuntimePlan
+from repro.models.config import ModelConfig, param_count
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.rules import ShardingPolicy
+
+_BIG = ("jamba-1.5-large-398b", "mixtral-8x22b")
+
+
+def plan_for(cfg: ModelConfig, shape_name: str, kind: str,
+             dp_axes=("data",)) -> RuntimePlan:
+    big = cfg.name in _BIG
+    moment_dtype = "bfloat16" if big else "float32"
+    accum_dtype = "bfloat16" if cfg.name == _BIG[0] else "float32"
+
+    if kind == "train":
+        micro = {"jamba-1.5-large-398b": 8, "mixtral-8x22b": 8}.get(
+            cfg.name, 4)
+        return RuntimePlan(
+            policy=ShardingPolicy(fsdp=True, dp_axes=tuple(dp_axes)),
+            microbatches=micro,
+            accum_dtype=accum_dtype,
+            opt=AdamWConfig(moment_dtype=moment_dtype,
+                            update_dtype=("bfloat16" if big
+                                          else "float32")),
+            remat=True,
+            pin_gathers=big)  # jamba/mixtral: keep FSDP gathers in-loop
+
+    # serving: weights 2D-sharded only when TP-only exceeds ~12 GB/chip
+    tp_bytes = 2 * param_count(cfg) / 16
+    fsdp = tp_bytes > 12e9
+    seq_shard = shape_name == "long_500k"
+    return RuntimePlan(
+        policy=ShardingPolicy(fsdp=fsdp, seq_shard_cache=seq_shard,
+                              dp_axes=tuple(dp_axes)),
+        microbatches=1,
+        opt=AdamWConfig(moment_dtype=moment_dtype),
+        remat=(kind == "prefill"))

@@ -1,0 +1,82 @@
+"""Assigned input-shape sets and ShapeDtypeStruct input specs.
+
+Every LM architecture is paired with four shapes:
+  train_4k     seq 4,096   x global_batch 256   -> train_step
+  prefill_32k  seq 32,768  x global_batch 32    -> prefill_step
+  decode_32k   cache 32,768 x global_batch 128  -> serve_step (1 new token)
+  long_500k    cache 524,288 x global_batch 1   -> serve_step; requires a
+               sub-quadratic/bounded-cache family (SSM / hybrid / windowed)
+
+`applicable()` encodes the mandated skips (full-attention archs skip
+long_500k; enc-dec/VLM notes in DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RunShape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, RunShape] = {
+    "train_4k": RunShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": RunShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": RunShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": RunShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: RunShape) -> Optional[str]:
+    """None if runnable; otherwise the (documented) skip reason."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: 500k decode needs an unbounded "
+                "KV cache and quadratic prefill; skipped per assignment "
+                "(see DESIGN.md §Arch-applicability)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: RunShape,
+                dtype=jnp.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train: {tokens, labels [, frontend|frames]}
+    prefill: {tokens [, frontend|frames]}
+    decode: {tokens (B,1), lengths (B,)} (+ caches, built separately).
+    Modality frontends are stubs: precomputed embeddings arrive as inputs.
+    """
+    b = shape.global_batch
+    t = shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+
+    if shape.kind in ("train", "prefill"):
+        n_text = t
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.frontend == "vision":
+            n_text = t - cfg.num_frontend_tokens
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_frontend_tokens, cfg.d_model), f32)
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_audio_frames, cfg.d_model), f32)
+        specs["tokens"] = tok((b, n_text))
+        if shape.kind == "train":
+            specs["labels"] = tok((b, n_text))
+        return specs
+
+    # decode: one new token against a seq_len cache
+    specs = {"tokens": tok((b, 1)),
+             "lengths": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    return specs

@@ -1,0 +1,19 @@
+"""The paper's primary contribution: locality-aware load-balancing algorithms
+(Balanced-PANDAS, JSQ-MaxWeight, Priority, FIFO), their discrete-time
+queueing simulator, the robustness-under-rate-estimation-error study, and the
+production-facing cluster router used by the serving engine / data pipeline.
+"""
+
+from repro.core.locality import (  # noqa: F401
+    LOCAL, RACK_LOCAL, REMOTE, Rates, Topology, Traffic, capacity_hot_rack,
+)
+from repro.core.simulator import (  # noqa: F401
+    ALGORITHMS, SimConfig, default_config, make_estimates, simulate, sweep,
+)
+from repro.core.cluster import (  # noqa: F401
+    ClusterSpec, BalancedPandasRouter, JsqMaxWeightRouter, FifoRouter, ROUTERS,
+)
+from repro.core.estimator import EwmaRateEstimator, ewma_update  # noqa: F401
+from repro.core.robustness import (  # noqa: F401
+    StudyConfig, default_study, run_study, sensitivity, summarize,
+)

@@ -1,0 +1,131 @@
+"""Balanced-PANDAS (paper §3.2; Xie et al. 2016, Yekkehkhany et al. 2018).
+
+Queueing structure: three queues per server, (Q^l, Q^k, Q^r) for tasks that
+are local / rack-local / remote *to that server*.  Workload
+
+    W_m = Q^l_m / alpha + Q^k_m / beta + Q^r_m / gamma.
+
+Routing: a type-``L`` arrival joins the queue of
+
+    argmin_m  W_m / (alpha*1{m local} + beta*1{m rack-local} + gamma*1{else})
+
+with random tie-breaking.  Scheduling: an idle server serves its own local
+queue first, then rack-local, then remote (and the class of the queue a task
+sits in is, by construction, its true service class — PANDAS dynamics here
+are exact, unlike the (m,n)-proxy needed for JSQ-MW).
+
+Robustness experiment: the *scheduler* computes W and the routing rates with
+estimated rates ``est`` of shape (M, 3) — per-server (alpha^, beta^, gamma^),
+supporting per-tier and per-server error models — while the *service*
+dynamics use the true ``true3``.
+
+Scale-invariance note (beyond-paper analytical finding, see EXPERIMENTS.md):
+if every estimate is scaled by one constant c, W scales by 1/c and the
+routing score W/rate by 1/c^2, so the argmin — and hence the entire sample
+path — is unchanged.  The same holds for MaxWeight (scores scale by c).  The
+paper's robustness experiment is therefore only meaningful for errors that
+are NOT a global rescaling (per-tier-subset or per-server errors).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import locality as loc
+
+
+class PandasState(NamedTuple):
+    q_local: jnp.ndarray   # (M,) int32 waiting local tasks
+    q_rack: jnp.ndarray    # (M,) int32 waiting rack-local tasks
+    q_remote: jnp.ndarray  # (M,) int32 waiting remote tasks
+    serving: jnp.ndarray   # (M,) int32 class in service (0 idle, 1/2/3)
+
+
+def init_state(topo: loc.Topology) -> PandasState:
+    z = jnp.zeros((topo.num_servers,), jnp.int32)
+    return PandasState(z, z, z, z)
+
+
+def num_in_system(s: PandasState) -> jnp.ndarray:
+    return (jnp.sum(s.q_local) + jnp.sum(s.q_rack) + jnp.sum(s.q_remote)
+            + jnp.sum(s.serving > 0))
+
+
+def workload(s: PandasState, est: jnp.ndarray) -> jnp.ndarray:
+    """(M,) estimated weighted workload W_m (waiting + in-service share).
+
+    est: (M, 3) per-server estimated (alpha^, beta^, gamma^).  The in-service
+    task contributes its expected residual 1/rate in the class it is being
+    served at, matching the paper's W definition over queue contents (queues
+    here exclude the in-service task, so we add it back).
+    """
+    w = (s.q_local / est[:, 0] + s.q_rack / est[:, 1] + s.q_remote / est[:, 2])
+    resid_rate = jnp.take_along_axis(
+        est, jnp.clip(s.serving - 1, 0, 2)[:, None], axis=1)[:, 0]
+    return w + jnp.where(s.serving > 0, 1.0 / resid_rate, 0.0)
+
+
+def route_one(s: PandasState, key: jax.Array, task: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray,
+              rack_of: jnp.ndarray) -> PandasState:
+    """Route a single arrival against the live workloads (estimated rates).
+
+    Tie-break: among minimal scores, prefer the faster tier (then random).
+    The paper says "ties are broken randomly", but read literally that
+    routes ~(M-M_R)/M of arrivals REMOTE whenever workloads tie at 0 (any
+    idle fleet), which no real scheduler does and which inverts the Fig. 1
+    ordering at sub-critical load — see EXPERIMENTS.md §Reproduction.  The
+    infinitesimal rate preference only discriminates exact ties.
+    """
+    local, rack = loc.locality_masks(task, rack_of)
+    est_rate = jnp.where(local, est[:, 0], jnp.where(rack, est[:, 1], est[:, 2]))
+    score = workload(s, est) / est_rate - est_rate * 1e-6
+    m_star = loc.random_argmin(key, score)
+    cls = jnp.where(local[m_star], loc.LOCAL,
+                    jnp.where(rack[m_star], loc.RACK_LOCAL, loc.REMOTE))
+    inc = active.astype(jnp.int32)
+    return PandasState(
+        q_local=s.q_local.at[m_star].add(inc * (cls == loc.LOCAL)),
+        q_rack=s.q_rack.at[m_star].add(inc * (cls == loc.RACK_LOCAL)),
+        q_remote=s.q_remote.at[m_star].add(inc * (cls == loc.REMOTE)),
+        serving=s.serving,
+    )
+
+
+def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              rack_of: jnp.ndarray):
+    """One time slot: arrivals -> service completions -> scheduling.
+
+    Returns (state, completions_this_slot).
+    """
+    k_route, k_serve = jax.random.split(key)
+    n_arr = types.shape[0]
+
+    # 1. Sequential routing of the slot's arrivals (workloads update in-slot).
+    def body(i, st):
+        return route_one(st, jax.random.fold_in(k_route, i), types[i],
+                         active[i], est, rack_of)
+    s = jax.lax.fori_loop(0, n_arr, body, s)
+
+    # 2. Service completions at the *true* rates.
+    rate = jnp.where(s.serving > 0, true3[jnp.clip(s.serving - 1, 0, 2)], 0.0)
+    done = jax.random.bernoulli(k_serve, rate)
+    completions = jnp.sum(done).astype(jnp.int32)
+    serving = jnp.where(done, 0, s.serving)
+
+    # 3. Idle servers pick local > rack-local > remote (conflict-free).
+    next_cls = jnp.where(s.q_local > 0, loc.LOCAL,
+                         jnp.where(s.q_rack > 0, loc.RACK_LOCAL,
+                                   jnp.where(s.q_remote > 0, loc.REMOTE, 0)))
+    take = (serving == 0) & (next_cls > 0)
+    s = PandasState(
+        q_local=s.q_local - (take & (next_cls == loc.LOCAL)),
+        q_rack=s.q_rack - (take & (next_cls == loc.RACK_LOCAL)),
+        q_remote=s.q_remote - (take & (next_cls == loc.REMOTE)),
+        serving=jnp.where(take, next_cls, serving).astype(jnp.int32),
+    )
+    return s, completions

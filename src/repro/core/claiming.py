@@ -1,0 +1,58 @@
+"""Sequential task-claiming for single-queue-per-server policies.
+
+JSQ-MaxWeight and Priority both schedule idle servers by scanning servers (in
+a random order each slot, for fairness) and letting each idle server claim
+the head task of some queue chosen by a policy-specific score.  Claims within
+a slot must be sequential so two servers cannot take the same last task; the
+loop carries the live queue vector.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import locality as loc
+
+
+def claim_loop(
+    q: jnp.ndarray,                 # (M,) int32 waiting tasks per queue
+    serving_rate: jnp.ndarray,      # (M,) f32; 0 == idle
+    key: jax.Array,
+    score_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    true_rate_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+):
+    """Each idle server m claims argmax_n score_fn(m, q) among nonempty queues.
+
+    score_fn(m, q) -> (M,) float scores; entries for empty queues are masked
+    here.  true_rate_fn(m, n) -> scalar true service rate once m starts n's
+    head task.  Returns (q, serving_rate).
+    """
+    m_total = q.shape[0]
+    k_perm, k_tie = jax.random.split(key)
+    order = jax.random.permutation(k_perm, m_total)
+
+    def body(i, carry):
+        q, serving_rate = carry
+        m = order[i]
+        idle = serving_rate[m] == 0.0
+        score = jnp.where(q > 0, score_fn(m, q), -jnp.inf)
+        any_task = jnp.any(q > 0)
+        n_star = loc.random_argmax(jax.random.fold_in(k_tie, i), score)
+        take = idle & any_task
+        q = q.at[n_star].add(-take.astype(jnp.int32))
+        new_rate = jnp.where(take, true_rate_fn(m, n_star), serving_rate[m])
+        serving_rate = serving_rate.at[m].set(new_rate)
+        return q, serving_rate
+
+    return jax.lax.fori_loop(0, m_total, body, (q, serving_rate))
+
+
+def jsq_route_one(q: jnp.ndarray, key: jax.Array, task: jnp.ndarray,
+                  active: jnp.ndarray) -> jnp.ndarray:
+    """Join-the-shortest-queue among the task's 3 local servers."""
+    qlen = q[task]  # (3,)
+    j = loc.random_argmin(key, qlen.astype(jnp.float32))
+    return q.at[task[j]].add(active.astype(jnp.int32))

@@ -1,0 +1,196 @@
+"""Production-facing cluster router: the paper's algorithms as an online,
+host-side service (numpy, incremental) for the serving engine and the data
+pipeline.
+
+"Servers" here are abstract workers (model-replica groups, data hosts,
+pipeline stages); "tasks" carry a set of local workers (where their
+prefix-KV / data chunk lives).  Locality tiers: local (on-worker), rack-local
+(same pod, ICI transfer), remote (cross-pod, DCN transfer).
+
+The router mirrors `core/balanced_pandas.py` et al. exactly — unit tests
+cross-check decisions against the JAX implementations — but maintains state
+incrementally so it can sit on the critical path of a serving engine, and it
+sources its rates from `EwmaRateEstimator` (blind mode) or fixed priors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.estimator import EwmaRateEstimator
+from repro.core.locality import LOCAL, RACK_LOCAL, REMOTE
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Worker fleet layout: `num_workers` workers in pods of `workers_per_pod`."""
+
+    num_workers: int
+    workers_per_pod: int
+
+    @property
+    def pod_of(self) -> np.ndarray:
+        return np.arange(self.num_workers) // self.workers_per_pod
+
+
+class BalancedPandasRouter:
+    """Incremental Balanced-PANDAS over an abstract worker fleet."""
+
+    name = "balanced_pandas"
+
+    def __init__(self, spec: ClusterSpec, rates: Sequence[float],
+                 estimator: Optional[EwmaRateEstimator] = None,
+                 seed: int = 0):
+        self.spec = spec
+        self.pod_of = spec.pod_of
+        self.prior = np.asarray(rates, np.float32)  # (3,) alpha,beta,gamma
+        self.estimator = estimator
+        self.q = np.zeros((spec.num_workers, 3), np.int64)  # per-tier queues
+        self.rng = np.random.default_rng(seed)
+
+    # -- estimated rates -----------------------------------------------------
+    def _est(self) -> np.ndarray:  # (M,3)
+        if self.estimator is not None:
+            return self.estimator.rates
+        return np.tile(self.prior, (self.spec.num_workers, 1))
+
+    def tiers(self, locals_: Sequence[int]) -> np.ndarray:
+        """(M,) tier index (0 local / 1 rack-local / 2 remote) of each worker."""
+        m = self.spec.num_workers
+        tier = np.full(m, 2, np.int64)
+        local_pods = np.unique(self.pod_of[list(locals_)])
+        tier[np.isin(self.pod_of, local_pods)] = 1
+        tier[list(locals_)] = 0
+        return tier
+
+    def workload(self) -> np.ndarray:
+        est = self._est()
+        return (self.q / est).sum(axis=1)
+
+    def route(self, locals_: Sequence[int]) -> int:
+        """Assign a task with the given local workers; returns the worker.
+
+        Ties (typically W == 0 on an idle fleet, where W/rate cannot
+        discriminate) break toward the highest-rate tier: an idle local
+        worker always wins over an idle remote one.  The discrete-time
+        simulator keeps the paper's uniform-random tie-break; this is the
+        production-sensible refinement (noted in EXPERIMENTS.md).
+        """
+        est = self._est()
+        tier = self.tiers(locals_)
+        rate = np.take_along_axis(est, tier[:, None], axis=1)[:, 0]
+        score = self.workload() / rate
+        mins = np.flatnonzero(score <= score.min() * (1 + 1e-9))
+        best_rate = rate[mins].max()
+        cand = mins[rate[mins] >= best_rate * (1 - 1e-9)]
+        m_star = int(self.rng.choice(cand))
+        self.q[m_star, tier[m_star]] += 1
+        return m_star
+
+    def next_task_tier(self, worker: int) -> Optional[int]:
+        """Which tier the idle worker serves next (local>rack>remote), or None."""
+        for t in range(3):
+            if self.q[worker, t] > 0:
+                self.q[worker, t] -= 1
+                return t
+        return None
+
+    def on_complete(self, worker: int, tier: int, service_time: float) -> None:
+        if self.estimator is not None:
+            self.estimator.observe(worker, tier, service_time)
+
+
+class JsqMaxWeightRouter:
+    """Incremental JSQ-MaxWeight baseline over the same fleet abstraction."""
+
+    name = "jsq_maxweight"
+
+    def __init__(self, spec: ClusterSpec, rates: Sequence[float],
+                 estimator: Optional[EwmaRateEstimator] = None, seed: int = 0):
+        self.spec = spec
+        self.pod_of = spec.pod_of
+        self.prior = np.asarray(rates, np.float32)
+        self.estimator = estimator
+        self.q = np.zeros(spec.num_workers, np.int64)
+        self.rng = np.random.default_rng(seed)
+
+    def _est(self) -> np.ndarray:
+        if self.estimator is not None:
+            return self.estimator.rates
+        return np.tile(self.prior, (self.spec.num_workers, 1))
+
+    def route(self, locals_: Sequence[int]) -> int:
+        locals_ = list(locals_)
+        j = _rand_argmin(self.rng, self.q[locals_].astype(np.float64))
+        self.q[locals_[j]] += 1
+        return int(locals_[j])
+
+    def claim(self, worker: int) -> Optional[int]:
+        """Idle worker claims head task of argmax weighted queue; returns the
+        queue (owning worker) claimed from, or None."""
+        if not (self.q > 0).any():
+            return None
+        est = self._est()[worker]  # (3,)
+        w = np.where(np.arange(self.spec.num_workers) == worker, est[0],
+                     np.where(self.pod_of == self.pod_of[worker], est[1], est[2]))
+        score = np.where(self.q > 0, w * self.q, -np.inf)
+        n_star = _rand_argmax(self.rng, score)
+        self.q[n_star] -= 1
+        return int(n_star)
+
+    def on_complete(self, worker: int, tier: int, service_time: float) -> None:
+        if self.estimator is not None:
+            self.estimator.observe(worker, tier, service_time)
+
+
+class FifoRouter:
+    """Global-FIFO baseline (Hadoop default)."""
+
+    name = "fifo"
+
+    def __init__(self, spec: ClusterSpec, rates: Sequence[float],
+                 estimator=None, seed: int = 0):
+        self.spec = spec
+        self.pod_of = spec.pod_of
+        self.queue: List[List[int]] = []
+
+    def route(self, locals_: Sequence[int]) -> int:
+        self.queue.append(list(locals_))
+        return -1  # assignment deferred to claim time
+
+    def claim(self, worker: int) -> Optional[List[int]]:
+        if not self.queue:
+            return None
+        return self.queue.pop(0)
+
+    def on_complete(self, worker: int, tier: int, service_time: float) -> None:
+        pass
+
+
+def tier_of(spec: ClusterSpec, locals_: Sequence[int], worker: int) -> int:
+    """0 local / 1 rack(pod)-local / 2 remote — shared helper."""
+    if worker in set(locals_):
+        return 0
+    if spec.pod_of[worker] in set(spec.pod_of[list(locals_)]):
+        return 1
+    return 2
+
+
+def _rand_argmin(rng, x: np.ndarray) -> int:
+    mins = np.flatnonzero(x == x.min())
+    return int(rng.choice(mins))
+
+
+def _rand_argmax(rng, x: np.ndarray) -> int:
+    maxs = np.flatnonzero(x == x.max())
+    return int(rng.choice(maxs))
+
+
+ROUTERS = {
+    "balanced_pandas": BalancedPandasRouter,
+    "jsq_maxweight": JsqMaxWeightRouter,
+    "fifo": FifoRouter,
+}

@@ -1,0 +1,74 @@
+"""Online processing-rate estimation (the paper's "future work" direction,
+following Blind GB-PANDAS, Yekkehkhany & Nagi 2020).
+
+The scheduler observes realized service times per (server, locality-tier) and
+maintains EWMA estimates of the rates; an epsilon-greedy exploration term
+occasionally routes a task off-policy so every (server, tier) keeps getting
+samples.  In the TPU-framework integration this is how replica throughput is
+tracked (stragglers/thermal throttling show up as decaying alpha-hat).
+
+Two implementations:
+  * `EwmaRateEstimator` — host-side (numpy), used by the serving engine and
+    data pipeline.
+  * `ewma_update` — functional JAX update, used inside simulations of the
+    blind variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ewma_update(est: jnp.ndarray, server: jnp.ndarray, tier: jnp.ndarray,
+                service_slots: jnp.ndarray, decay: float = 0.98) -> jnp.ndarray:
+    """Functional EWMA update of est (M,3) from one completed task.
+
+    service_slots: observed completion time (slots).  The unbiased rate sample
+    for geometric service is 1/service_slots.
+    """
+    sample = 1.0 / jnp.maximum(service_slots.astype(jnp.float32), 1.0)
+    old = est[server, tier]
+    return est.at[server, tier].set(decay * old + (1.0 - decay) * sample)
+
+
+@dataclasses.dataclass
+class EwmaRateEstimator:
+    """Host-side per-(server, tier) EWMA rate estimator with priors.
+
+    Until a (server, tier) pair has `min_samples` observations its estimate is
+    blended toward the prior, which keeps cold-start routing sane (the blind
+    algorithm's exploration phase).
+    """
+
+    num_servers: int
+    prior: np.ndarray  # (3,) prior rates (alpha, beta, gamma)
+    decay: float = 0.98
+    min_samples: int = 8
+
+    def __post_init__(self):
+        # EWMA the service TIME and invert: 1/E[T] is the consistent rate
+        # estimator (E[1/T] diverges for exponential service).
+        self._time = np.tile(1.0 / np.asarray(self.prior, np.float64),
+                             (self.num_servers, 1))
+        self._count = np.zeros((self.num_servers, 3), np.int64)
+
+    def observe(self, server: int, tier: int, service_time: float) -> None:
+        """Record one completed task's service time (tier: 0 local/1 rack/2 remote)."""
+        self._time[server, tier] = (self.decay * self._time[server, tier]
+                                    + (1.0 - self.decay)
+                                    * max(service_time, 1e-9))
+        self._count[server, tier] += 1
+
+    @property
+    def rates(self) -> np.ndarray:
+        """(M, 3) current estimates, prior-blended where under-sampled."""
+        w = np.minimum(self._count / self.min_samples, 1.0)
+        est = 1.0 / np.maximum(self._time, 1e-9)
+        return (w * est + (1.0 - w) * self.prior[None, :]).astype(np.float32)
+
+    @property
+    def sample_counts(self) -> np.ndarray:
+        return self._count.copy()

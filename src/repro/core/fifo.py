@@ -1,0 +1,92 @@
+"""FIFO — Hadoop's default scheduler (paper §1, §4 comparison baseline).
+
+A single global FIFO queue of tasks; an idle server takes the head task
+regardless of locality, so the realized service rate is the task's true
+locality tier w.r.t. the serving server (exact — the ring buffer stores task
+types).  FIFO ignores both queue state and rates, so estimation errors do not
+change its decisions; it is neither heavy-traffic delay optimal nor
+throughput optimal on the rack model, and its queue diverges inside the other
+algorithms' capacity region (paper Fig. 1).  The ring buffer is bounded
+(``cap``); arrivals beyond it are dropped and counted, which caps the
+measured delay at saturation instead of overflowing.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import locality as loc
+
+
+class FifoState(NamedTuple):
+    buf: jnp.ndarray           # (cap, 3) int32 ring buffer of task types
+    head: jnp.ndarray          # () int32 index of oldest task
+    count: jnp.ndarray         # () int32 number queued
+    serving_rate: jnp.ndarray  # (M,) f32; 0 idle
+    drops: jnp.ndarray         # () int32 arrivals dropped (buffer full)
+
+
+def init_state(topo: loc.Topology, cap: int = 32768) -> FifoState:
+    return FifoState(
+        buf=jnp.zeros((cap, 3), jnp.int32),
+        head=jnp.zeros((), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+        serving_rate=jnp.zeros((topo.num_servers,), jnp.float32),
+        drops=jnp.zeros((), jnp.int32),
+    )
+
+
+def num_in_system(s: FifoState) -> jnp.ndarray:
+    return s.count + jnp.sum(s.serving_rate > 0).astype(jnp.int32)
+
+
+def slot_step(s: FifoState, key: jax.Array, types: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              rack_of: jnp.ndarray):
+    del est  # FIFO consults nothing
+    cap = s.buf.shape[0]
+    k_serve, k_perm = jax.random.split(key)
+    n_arr = types.shape[0]
+
+    # 1. Push arrivals (drop when full).
+    def push(i, st):
+        buf, head, count, drops = st
+        fits = active[i] & (count < cap)
+        pos = (head + count) % cap
+        buf = buf.at[pos].set(jnp.where(fits, types[i], buf[pos]))
+        count = count + fits.astype(jnp.int32)
+        drops = drops + (active[i] & ~fits).astype(jnp.int32)
+        return buf, head, count, drops
+
+    buf, head, count, drops = jax.lax.fori_loop(
+        0, n_arr, push, (s.buf, s.head, s.count, s.drops))
+
+    # 2. Service completions (true rates).
+    done = jax.random.bernoulli(k_serve, s.serving_rate)
+    completions = jnp.sum(done).astype(jnp.int32)
+    serving_rate = jnp.where(done, 0.0, s.serving_rate)
+
+    # 3. Idle servers pop heads in random server order.
+    order = jax.random.permutation(k_perm, serving_rate.shape[0])
+
+    def pop(i, st):
+        head, count, serving_rate = st
+        m = order[i]
+        take = (serving_rate[m] == 0.0) & (count > 0)
+        task = buf[head % cap]
+        local, rack = loc.locality_masks(task, rack_of)
+        rate = jnp.where(local[m], true3[0],
+                         jnp.where(rack[m], true3[1], true3[2]))
+        serving_rate = serving_rate.at[m].set(
+            jnp.where(take, rate, serving_rate[m]))
+        head = (head + take.astype(jnp.int32)) % cap
+        count = count - take.astype(jnp.int32)
+        return head, count, serving_rate
+
+    head, count, serving_rate = jax.lax.fori_loop(
+        0, serving_rate.shape[0], pop, (head, count, serving_rate))
+
+    return FifoState(buf, head, count, serving_rate, drops), completions

@@ -1,0 +1,69 @@
+"""JSQ-MaxWeight (paper §3.3; Wang et al. 2016, extended by Xie et al. 2016).
+
+One queue per server, holding tasks *local to that server*.  Routing: JSQ
+among the arrival's 3 local queues.  Scheduling: an idle server m serves the
+head task of
+
+    argmax_n (alpha*1{n=m} + beta*1{R(n)=R(m)} + gamma*1{else}) * Q_n(t)
+
+with random tie-breaking.  The weight uses the scheduler's *estimated* rates
+(robustness experiment); the realized service rate uses the true rates via
+the (m,n)-relation proxy (exact for n=m; see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import claiming, locality as loc
+
+
+class JsqMwState(NamedTuple):
+    q: jnp.ndarray             # (M,) int32 waiting tasks (local to each server)
+    serving_rate: jnp.ndarray  # (M,) f32 true rate of in-service task; 0 idle
+
+
+def init_state(topo: loc.Topology) -> JsqMwState:
+    m = topo.num_servers
+    return JsqMwState(jnp.zeros((m,), jnp.int32), jnp.zeros((m,), jnp.float32))
+
+
+def num_in_system(s: JsqMwState) -> jnp.ndarray:
+    return jnp.sum(s.q) + jnp.sum(s.serving_rate > 0)
+
+
+def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              rack_of: jnp.ndarray):
+    """est: (M, 3) per-server estimated rates; server m weighs queues with its
+    own estimates est[m]."""
+    k_route, k_serve, k_claim = jax.random.split(key, 3)
+    n_arr = types.shape[0]
+
+    # 1. JSQ routing among each arrival's local servers.
+    def body(i, q):
+        return claiming.jsq_route_one(q, jax.random.fold_in(k_route, i),
+                                      types[i], active[i])
+    q = jax.lax.fori_loop(0, n_arr, body, s.q)
+
+    # 2. Service completions at true rates.
+    done = jax.random.bernoulli(k_serve, s.serving_rate)
+    completions = jnp.sum(done).astype(jnp.int32)
+    serving_rate = jnp.where(done, 0.0, s.serving_rate)
+
+    # 3. MaxWeight claims: weighted queue lengths with *estimated* rates.
+    sid = jnp.arange(q.shape[0])
+
+    def score_fn(m, qv):
+        w = loc.pair_rate(m, sid, rack_of, est[m])
+        return w * qv.astype(jnp.float32)
+
+    def true_rate_fn(m, n):
+        return loc.pair_rate(m, n, rack_of, true3)
+
+    q, serving_rate = claiming.claim_loop(q, serving_rate, k_claim,
+                                          score_fn, true_rate_fn)
+    return JsqMwState(q, serving_rate), completions

@@ -1,0 +1,205 @@
+"""Rack/locality model of a data center (paper §2, System Model).
+
+A data center has ``M`` servers grouped into racks of ``M_R`` servers.  A map
+task's data chunk is replicated on 3 servers (its *local* servers); servers
+sharing a rack with a local server are *rack-local*; everything else is
+*remote*.  Mean service rates are ``alpha > beta > gamma`` for the three
+tiers (probability of completing the in-service task in one slot of the
+discrete-time model, i.e. geometric service with means 1/alpha etc.).
+
+Capacity (hot-rack traffic).  With a fraction ``p_hot`` of arrivals drawn
+with all three local servers inside rack 0 ("hot" types) and the rest
+uniform over all servers, the fluid capacity is
+
+    if p_hot * M * alpha <= M_R * alpha:      Lambda* = M * alpha
+    else:  Lambda* = (M - M_R + M_R * alpha/gamma)
+                     / ((1-p_hot)/alpha + p_hot/gamma)
+
+Derivation: rack-0 servers serve hot tasks locally at ``alpha`` (with
+diverse hot types every rack-0 server is local to many hot types, so a
+balanced scheduler keeps each on its own local tasks); overflow hot traffic
+is served remotely at ``gamma`` by the other racks, which also absorb the
+uniform traffic locally at ``alpha``.  Uniform tasks lose nothing by
+avoiding rack 0 since any of their (random) local servers serves at
+``alpha``.  Setting the other-rack utilisation to one gives the formula.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LOCAL, RACK_LOCAL, REMOTE = 1, 2, 3  # service classes; 0 == idle / none
+NUM_REPLICAS = 3  # Hadoop default: each chunk lives on 3 servers
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Static rack structure: ``num_servers`` servers in racks of ``servers_per_rack``."""
+
+    num_servers: int
+    servers_per_rack: int
+
+    def __post_init__(self):
+        if self.num_servers % self.servers_per_rack != 0:
+            raise ValueError(
+                f"num_servers={self.num_servers} not divisible by "
+                f"servers_per_rack={self.servers_per_rack}"
+            )
+        if self.servers_per_rack < NUM_REPLICAS:
+            raise ValueError("need at least 3 servers per rack for hot-rack types")
+
+    @property
+    def num_racks(self) -> int:
+        return self.num_servers // self.servers_per_rack
+
+    @property
+    def rack_of(self) -> np.ndarray:
+        """(M,) rack id of each server."""
+        return np.arange(self.num_servers) // self.servers_per_rack
+
+
+@dataclasses.dataclass(frozen=True)
+class Rates:
+    """Service rates per locality tier (completion prob/slot)."""
+
+    alpha: float = 0.5
+    beta: float = 0.45
+    gamma: float = 0.25
+
+    def __post_init__(self):
+        if not (0 < self.gamma < self.beta < self.alpha <= 1.0):
+            raise ValueError(f"need 0 < gamma < beta < alpha <= 1, got {self}")
+
+    @property
+    def heavy_traffic_optimal(self) -> bool:
+        """Balanced-PANDAS heavy-traffic delay optimality condition (paper §3.2)."""
+        return self.beta**2 > self.alpha * self.gamma
+
+    def scaled(self, mult: float) -> "Rates":
+        """Mis-estimated rates: all three off by the same multiplier (paper §4)."""
+        return Rates(self.alpha * mult, self.beta * mult, min(self.gamma * mult, 1.0)) \
+            if mult <= 1.0 else Rates(
+                min(self.alpha * mult, 1.0),
+                min(self.beta * mult, 1.0),
+                min(self.gamma * mult, 1.0),
+            )
+
+    def as_array(self) -> jnp.ndarray:
+        return jnp.array([self.alpha, self.beta, self.gamma], dtype=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Arrival process: truncated-Poisson(lam_total) arrivals/slot, each task's
+    type = 3 distinct servers sampled from a hot-rack mixture."""
+
+    lam_total: float  # mean arrivals per slot (all types)
+    p_hot: float = 0.5  # fraction of tasks whose locals all live in rack 0
+    max_arrivals: int = 24  # C_A bound of the paper's model
+
+
+def capacity_hot_rack(topo: Topology, rates: Rates, p_hot: float) -> float:
+    """Fluid capacity Lambda* (tasks/slot) for the hot-rack traffic pattern."""
+    m, mr = topo.num_servers, topo.servers_per_rack
+    a, g = rates.alpha, rates.gamma
+    lam_uniform_only = m * a
+    if p_hot * lam_uniform_only <= mr * a:  # hot fits in rack 0 locally
+        return lam_uniform_only
+    return (m - mr + mr * a / g) / ((1.0 - p_hot) / a + p_hot / g)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized locality primitives (jit/vmap friendly)
+# ---------------------------------------------------------------------------
+
+def locality_masks(task_locals: jnp.ndarray, rack_of: jnp.ndarray):
+    """Per-server local / rack-local masks for one task.
+
+    task_locals: (3,) int32 server ids (the task's replicas)
+    rack_of:     (M,) int32 rack id per server
+    returns (local_mask, rack_mask): (M,) bool; rack_mask excludes locals.
+    """
+    m = rack_of.shape[0]
+    sid = jnp.arange(m, dtype=task_locals.dtype)
+    local = jnp.any(sid[:, None] == task_locals[None, :], axis=1)
+    local_racks = rack_of[task_locals]  # (3,)
+    in_rack = jnp.any(rack_of[:, None] == local_racks[None, :], axis=1)
+    return local, in_rack & ~local
+
+
+def rate_vector(task_locals: jnp.ndarray, rack_of: jnp.ndarray,
+                rates3: jnp.ndarray) -> jnp.ndarray:
+    """(M,) per-server service rate for one task under rates3=[a,b,g]."""
+    local, rack = locality_masks(task_locals, rack_of)
+    return jnp.where(local, rates3[0], jnp.where(rack, rates3[1], rates3[2]))
+
+
+def class_of(task_locals: jnp.ndarray, rack_of: jnp.ndarray,
+             server: jnp.ndarray) -> jnp.ndarray:
+    """Service class (LOCAL/RACK_LOCAL/REMOTE) of `server` for this task."""
+    local, rack = locality_masks(task_locals, rack_of)
+    return jnp.where(local[server], LOCAL,
+                     jnp.where(rack[server], RACK_LOCAL, REMOTE)).astype(jnp.int32)
+
+
+def pair_rate(m: jnp.ndarray, n: jnp.ndarray, rack_of: jnp.ndarray,
+              rates3: jnp.ndarray) -> jnp.ndarray:
+    """(m,n)-relation proxy rate: server m pulling from server n's local queue.
+
+    alpha if m == n, beta if same rack, gamma otherwise.  Used by JSQ-MW /
+    Priority both as the MaxWeight weight (with estimated rates) and as the
+    simulated service rate (with true rates); see DESIGN.md §3 for the O(1/M)
+    fidelity note.
+    """
+    return jnp.where(m == n, rates3[0],
+                     jnp.where(rack_of[m] == rack_of[n], rates3[1], rates3[2]))
+
+
+def sample_task_types(key: jax.Array, topo: Topology, traffic: Traffic,
+                      batch: int) -> jnp.ndarray:
+    """Sample `batch` task types: (batch, 3) int32, 3 distinct servers each.
+
+    Hot tasks (prob p_hot) draw all replicas from rack 0; the rest uniformly
+    from all servers.  Uses Gumbel top-k for without-replacement sampling.
+    """
+    m, mr = topo.num_servers, topo.servers_per_rack
+    k_hot, k_gum = jax.random.split(key)
+    hot = jax.random.bernoulli(k_hot, traffic.p_hot, (batch,))
+    logits = jnp.where(
+        hot[:, None],
+        jnp.where(jnp.arange(m)[None, :] < mr, 0.0, -jnp.inf),
+        jnp.zeros((1, m)),
+    )
+    gumbel = jax.random.gumbel(k_gum, (batch, m))
+    _, idx = jax.lax.top_k(logits + gumbel, NUM_REPLICAS)
+    return jnp.sort(idx, axis=1).astype(jnp.int32)  # canonical m1<m2<m3
+
+
+def sample_arrivals(key: jax.Array, topo: Topology, traffic: Traffic):
+    """One slot of arrivals: (types (C_A,3) int32, active (C_A,) bool)."""
+    k_n, k_t = jax.random.split(key)
+    n = jnp.minimum(
+        jax.random.poisson(k_n, traffic.lam_total), traffic.max_arrivals
+    )
+    active = jnp.arange(traffic.max_arrivals) < n
+    types = sample_task_types(k_t, topo, traffic, traffic.max_arrivals)
+    return types, active
+
+
+def random_argmin(key: jax.Array, score: jnp.ndarray) -> jnp.ndarray:
+    """argmin with uniform random tie-breaking among exact minima (paper: ties
+    are broken randomly)."""
+    is_min = score == jnp.min(score)
+    g = jax.random.gumbel(key, score.shape)
+    return jnp.argmax(jnp.where(is_min, g, -jnp.inf)).astype(jnp.int32)
+
+
+def random_argmax(key: jax.Array, score: jnp.ndarray) -> jnp.ndarray:
+    is_max = score == jnp.max(score)
+    g = jax.random.gumbel(key, score.shape)
+    return jnp.argmax(jnp.where(is_max, g, -jnp.inf)).astype(jnp.int32)

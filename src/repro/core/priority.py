@@ -1,0 +1,67 @@
+"""Priority algorithm (paper §3.1; Xie & Lu 2015).
+
+Designed for TWO locality levels (local/remote); run here on the 3-level
+rack-structured system exactly as the paper does, where it is no longer
+throughput optimal.  One queue per server holding local tasks; JSQ routing
+among the arrival's 3 local queues.  An idle server serves its own queue if
+nonempty (local, rate alpha); otherwise it helps the LONGEST queue in the
+system (unweighted argmax — the algorithm ignores rates entirely, so rate
+mis-estimation does not change its decisions; it serves as the
+rate-oblivious control arm in the robustness study).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import claiming, locality as loc
+
+
+class PriorityState(NamedTuple):
+    q: jnp.ndarray             # (M,) int32
+    serving_rate: jnp.ndarray  # (M,) f32; 0 idle
+
+
+def init_state(topo: loc.Topology) -> PriorityState:
+    m = topo.num_servers
+    return PriorityState(jnp.zeros((m,), jnp.int32),
+                         jnp.zeros((m,), jnp.float32))
+
+
+def num_in_system(s: PriorityState) -> jnp.ndarray:
+    return jnp.sum(s.q) + jnp.sum(s.serving_rate > 0)
+
+
+def slot_step(s: PriorityState, key: jax.Array, types: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              rack_of: jnp.ndarray):
+    del est  # the Priority algorithm never consults service rates
+    k_route, k_serve, k_claim = jax.random.split(key, 3)
+    n_arr = types.shape[0]
+
+    def body(i, q):
+        return claiming.jsq_route_one(q, jax.random.fold_in(k_route, i),
+                                      types[i], active[i])
+    q = jax.lax.fori_loop(0, n_arr, body, s.q)
+
+    done = jax.random.bernoulli(k_serve, s.serving_rate)
+    completions = jnp.sum(done).astype(jnp.int32)
+    serving_rate = jnp.where(done, 0.0, s.serving_rate)
+
+    sid = jnp.arange(q.shape[0])
+    big = jnp.float32(1e9)
+
+    def score_fn(m, qv):
+        # Own nonempty queue wins outright; otherwise longest queue.
+        own = (sid == m) & (qv > 0)
+        return jnp.where(own, big, qv.astype(jnp.float32))
+
+    def true_rate_fn(m, n):
+        return loc.pair_rate(m, n, rack_of, true3)
+
+    q, serving_rate = claiming.claim_loop(q, serving_rate, k_claim,
+                                          score_fn, true_rate_fn)
+    return PriorityState(q, serving_rate), completions

@@ -1,0 +1,102 @@
+"""Robustness study driver (paper §4): sweeps load x estimation-error for the
+four algorithms and emits the data behind Figures 1-6.
+
+Figure map:
+  fig1: all four algorithms, exact parameters, load sweep.
+  fig2: PANDAS vs JSQ-MW, exact parameters, high-load closeup.
+  fig3: robustness with parameters LOWER than real by eps in {5..30}%.
+  fig4: sensitivity (delay vs eps) of PANDAS vs JSQ-MW, lower errors.
+  fig5/fig6: same with parameters HIGHER than real.
+
+Priority and FIFO never consult the rate estimates, so their error curves are
+flat by construction; we simulate them once (exact) per load and reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import locality as loc, simulator as sim
+
+EPS_GRID = (0.05, 0.10, 0.15, 0.20, 0.25, 0.30)
+RATE_AWARE = ("balanced_pandas", "jsq_maxweight")
+RATE_OBLIVIOUS = ("priority", "fifo")
+
+
+@dataclasses.dataclass(frozen=True)
+class StudyConfig:
+    sim: sim.SimConfig
+    loads: Sequence[float] = (0.5, 0.6, 0.7, 0.8, 0.9, 0.95)
+    high_loads: Sequence[float] = (0.90, 0.93, 0.95, 0.97)
+    eps_grid: Sequence[float] = EPS_GRID
+    error_mode: str = "per_server"
+    seeds: Sequence[int] = (0, 1)
+
+
+def default_study(fast: bool = False) -> StudyConfig:
+    if fast:
+        return StudyConfig(
+            sim=sim.default_config(horizon=4_000, warmup=1_000),
+            loads=(0.6, 0.8, 0.9), high_loads=(0.9, 0.95),
+            eps_grid=(0.1, 0.3), seeds=(0,),
+        )
+    return StudyConfig(sim=sim.default_config(horizon=30_000, warmup=8_000))
+
+
+def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
+              signs: Sequence[int] = (-1, 1)) -> Dict:
+    """Returns nested results:
+    delay[algo]: (L, E, S) with E = 1 (exact) + len(eps_grid)*len(signs)
+    plus the grids needed to plot.  Error settings only materialize for
+    rate-aware algorithms; oblivious ones get the exact column only.
+    """
+    algos = list(algos or (RATE_AWARE + RATE_OBLIVIOUS))
+    cap = loc.capacity_hot_rack(cfg.sim.topo, cfg.sim.true_rates, cfg.sim.p_hot)
+    lam = np.asarray(cfg.loads, np.float32) * cap
+    seeds = np.asarray(cfg.seeds)
+
+    est_exact = sim.make_estimates(cfg.sim, "network", 0.0, -1)
+    est_settings = [("exact", 0.0, 0)]
+    ests = [est_exact]
+    for sign in signs:
+        for eps in cfg.eps_grid:
+            est_settings.append((cfg.error_mode, eps, sign))
+            ests.append(sim.make_estimates(cfg.sim, cfg.error_mode, eps, sign))
+    est_stack = np.stack(ests)
+
+    out: Dict = {"capacity": cap, "loads": np.asarray(cfg.loads),
+                 "lam": lam, "est_settings": est_settings,
+                 "delay": {}, "throughput": {}, "final_n": {}}
+    for algo in algos:
+        stack = est_stack if algo in RATE_AWARE else est_stack[:1]
+        res = sim.sweep(algo, cfg.sim, lam, stack, seeds)
+        out["delay"][algo] = res["mean_delay"]
+        out["throughput"][algo] = res["throughput"]
+        out["final_n"][algo] = res["final_n"]
+    return out
+
+
+def sensitivity(delay_les: np.ndarray) -> np.ndarray:
+    """Paper figs 4/6 metric: relative delay deviation from the exact-parameter
+    run, per error setting.  delay_les: (L, E, S) -> (L, E-1) mean over seeds."""
+    d = delay_les.mean(-1)
+    return (d[:, 1:] - d[:, :1]) / d[:, :1]
+
+
+def summarize(study: Dict) -> str:
+    """Human-readable table of the study results."""
+    lines = []
+    settings = study["est_settings"]
+    for algo, d in study["delay"].items():
+        dm = d.mean(-1)  # (L, E)
+        for li, load in enumerate(study["loads"]):
+            cols = "  ".join(f"{dm[li, ei]:8.2f}" for ei in range(dm.shape[1]))
+            lines.append(f"{algo:16s} rho={load:4.2f}  {cols}")
+        lines.append("")
+    lines.append("columns: " + ", ".join(
+        f"{m}{'' if s == 0 else ('-' if s < 0 else '+')}{e:.0%}"
+        for (m, e, s) in settings))
+    return "\n".join(lines)

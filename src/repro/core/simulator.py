@@ -1,0 +1,165 @@
+"""Vectorized discrete-time simulator (paper §4 experimental engine).
+
+One `jax.lax.scan` over time slots per configuration; `jax.vmap` over the
+sweep grid (load x error x seed).  All state is fixed-shape, so the whole
+robustness study compiles to a single XLA program.
+
+Mean task completion time is measured via Little's law:
+``W = mean(N_in_system over measurement window) / lambda_total`` (slots),
+exact for stationary ergodic systems.  Divergence (instability / outside the
+capacity region) is visible as ``final_n`` growing with the horizon and as
+throughput < arrival rate.
+
+Error models for the estimated rates (see balanced_pandas.py docstring for
+the scale-invariance finding that motivates them):
+  - "uniform":    est = true * (1 +/- eps) for all three tiers — provably a
+                  no-op for PANDAS/MW decisions; kept as the control arm.
+  - "network":    alpha known exactly; beta, gamma scaled by (1 +/- eps) —
+                  mis-estimated network depreciation (the realistic reading
+                  of the paper's experiment; used for the figure benches).
+  - "per_server": each server's three estimates carry iid multipliers in
+                  [1-eps, 1] (sign<0) or [1, 1+eps] (sign>0).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import balanced_pandas, fifo, jsq_maxweight, priority
+from repro.core import locality as loc
+
+ALGORITHMS = {
+    "balanced_pandas": balanced_pandas,
+    "jsq_maxweight": jsq_maxweight,
+    "priority": priority,
+    "fifo": fifo,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    topo: loc.Topology
+    true_rates: loc.Rates
+    p_hot: float = 0.5
+    max_arrivals: int = 24
+    horizon: int = 40_000
+    warmup: int = 10_000
+    fifo_cap: int = 32_768
+
+
+def default_config(**kw) -> SimConfig:
+    """Paper-scale default: 24 servers in 4 racks, hot-rack traffic."""
+    return SimConfig(topo=loc.Topology(24, 6), true_rates=loc.Rates(), **kw)
+
+
+def make_estimates(cfg: SimConfig, mode: str, eps: float, sign: int,
+                   seed: int = 0) -> np.ndarray:
+    """(M, 3) estimated rates for one error setting.  sign: -1 lower, +1 higher."""
+    m = cfg.topo.num_servers
+    true3 = np.array([cfg.true_rates.alpha, cfg.true_rates.beta,
+                      cfg.true_rates.gamma], np.float32)
+    if mode == "uniform":
+        mult = np.full((m, 3), 1.0 + sign * eps, np.float32)
+    elif mode == "network":
+        mult = np.ones((m, 3), np.float32)
+        mult[:, 1] = mult[:, 2] = 1.0 + sign * eps
+    elif mode == "per_server":
+        rng = np.random.default_rng(seed)
+        u = rng.uniform(0.0, eps, size=(m, 3)).astype(np.float32)
+        mult = 1.0 + sign * u
+    else:
+        raise ValueError(f"unknown error mode {mode!r}")
+    est = true3[None, :] * mult
+    return np.clip(est, 1e-3, 1.0)
+
+
+def _build_run(algo_name: str, cfg: SimConfig):
+    """Returns jit-able run(lam_total, est(M,3), seed) -> metrics dict."""
+    algo = ALGORITHMS[algo_name]
+    topo, true_rates = cfg.topo, cfg.true_rates
+    rack_of = jnp.asarray(topo.rack_of, jnp.int32)
+    true3 = true_rates.as_array()
+
+    if algo_name == "fifo":
+        init = functools.partial(algo.init_state, topo, cap=cfg.fifo_cap)
+    else:
+        init = functools.partial(algo.init_state, topo)
+
+    def run(lam_total, est, seed):
+        base = jax.random.PRNGKey(seed)
+        traffic = loc.Traffic(lam_total=lam_total, p_hot=cfg.p_hot,
+                              max_arrivals=cfg.max_arrivals)
+
+        def step(carry, t):
+            state, mean_n, n_meas, completions = carry
+            key_t = jax.random.fold_in(base, t)
+            k_arr, k_algo = jax.random.split(key_t)
+            # Arrival stream depends only on (seed, t): identical across
+            # algorithms -> paired comparisons (common random numbers).
+            types, active = _sample_arrivals(k_arr, topo, lam_total,
+                                             traffic.p_hot,
+                                             traffic.max_arrivals)
+            state, compl = algo.slot_step(state, k_algo, types, active,
+                                          est, true3, rack_of)
+            n = algo.num_in_system(state).astype(jnp.float32)
+            in_window = (t >= cfg.warmup).astype(jnp.float32)
+            n_meas = n_meas + in_window
+            mean_n = mean_n + in_window * (n - mean_n) / jnp.maximum(n_meas, 1.0)
+            completions = completions + compl * (t >= cfg.warmup)
+            return (state, mean_n, n_meas, completions), ()
+
+        carry0 = (init(), jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0))
+        (state, mean_n, n_meas, completions), _ = jax.lax.scan(
+            step, carry0, jnp.arange(cfg.horizon))
+        out = {
+            "mean_n": mean_n,
+            "mean_delay": mean_n / lam_total,
+            "throughput": completions / jnp.maximum(n_meas, 1.0),
+            "final_n": algo.num_in_system(state).astype(jnp.float32),
+        }
+        if algo_name == "fifo":
+            out["drops"] = state.drops.astype(jnp.float32)
+        return out
+
+    return run
+
+
+def _sample_arrivals(key, topo, lam_total, p_hot, max_arrivals):
+    traffic = loc.Traffic(lam_total=1.0, p_hot=p_hot,
+                          max_arrivals=max_arrivals)  # lam passed dynamically
+    k_n, k_t = jax.random.split(key)
+    n = jnp.minimum(jax.random.poisson(k_n, lam_total), max_arrivals)
+    active = jnp.arange(max_arrivals) < n
+    types = loc.sample_task_types(k_t, topo, traffic, max_arrivals)
+    return types, active
+
+
+def simulate(algo_name: str, cfg: SimConfig, lam_total: float,
+             est: np.ndarray, seed: int = 0) -> Dict[str, Any]:
+    """Single-configuration run (jit-compiled)."""
+    run = jax.jit(_build_run(algo_name, cfg))
+    out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
+              jnp.asarray(seed, jnp.uint32))
+    return {k: float(v) for k, v in out.items()}
+
+
+def sweep(algo_name: str, cfg: SimConfig, lam_grid: np.ndarray,
+          est_stack: np.ndarray, seeds: np.ndarray) -> Dict[str, np.ndarray]:
+    """Full cartesian sweep, vmapped: results have shape (L, E, S).
+
+    lam_grid: (L,) loads; est_stack: (E, M, 3); seeds: (S,).
+    """
+    run = _build_run(algo_name, cfg)
+    f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),
+                 (0, None, None))
+    f = jax.jit(f)
+    out = f(jnp.asarray(lam_grid, jnp.float32),
+            jnp.asarray(est_stack, jnp.float32),
+            jnp.asarray(seeds, jnp.uint32))
+    return {k: np.asarray(v) for k, v in out.items()}

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute paths:
+
+  wwl_route        — batched Balanced-PANDAS weighted-workload argmin routing
+  maxweight        — batched JSQ-MaxWeight weighted argmax claims
+  flash_attention  — block-wise online-softmax attention (GQA/SWA/softcap)
+  ssd_scan         — Mamba-2 SSD chunked scan
+
+Public API lives in ops.py (padding + interpret fallback); oracles in ref.py.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention, maxweight_claim, ssd, wwl_route,
+)

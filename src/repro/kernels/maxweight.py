@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: batched JSQ-MaxWeight claim scoring (weighted argmax).
+
+The MaxWeight baseline's hot loop: each of B idle servers scans all N queues
+for ``argmax_n w(m,n) * Q_n`` where the weight depends on server/queue
+identity and rack co-membership.  Same tiling/accumulator structure as
+wwl_route (see that module for the TPU-adaptation rationale), with a masked
+max-reduction instead of min and the empty-queue mask folded in.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -3.0e38
+
+
+def _claim_kernel(queues_ref, qrack_ref, idle_ref, irack_ref, rates_ref,
+                  score_ref, queue_ref, *, block_n: int):
+    """One (idle-server-block, queue-block) tile.
+
+    queues_ref: (bn,)   f32  queue lengths of this block
+    qrack_ref:  (bn,)   i32  rack of each queue's owner
+    idle_ref:   (bb,)   i32  idle server ids
+    irack_ref:  (bb,)   i32  idle server racks
+    rates_ref:  (bb, 3) f32  per-idle-server estimated rates
+    score_ref:  (bb,)   f32  running max score (output, revisited)
+    queue_ref:  (bb,)   i32  running argmax    (output, revisited)
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, NEG_INF)
+        queue_ref[...] = jnp.zeros_like(queue_ref)
+
+    q = queues_ref[...]
+    qrack = qrack_ref[...]
+    idle = idle_ref[...]
+    irack = irack_ref[...]
+    rates = rates_ref[...]
+
+    bb, bn = idle.shape[0], q.shape[0]
+    qid = j * block_n + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 1)
+
+    is_self = qid == idle[:, None]
+    same_rack = jnp.broadcast_to(qrack[None, :], (bb, bn)) == irack[:, None]
+    w = jnp.where(is_self, rates[:, 0:1],
+                  jnp.where(same_rack, rates[:, 1:2], rates[:, 2:3]))
+    score = jnp.where(q[None, :] > 0, w * q[None, :], NEG_INF)
+
+    blk_max = jnp.max(score, axis=1)
+    blk_arg = jnp.argmax(score, axis=1).astype(jnp.int32)
+
+    best = score_ref[...]
+    better = blk_max > best  # strict: lowest queue index on ties
+    score_ref[...] = jnp.where(better, blk_max, best)
+    queue_ref[...] = jnp.where(better, j * block_n + blk_arg, queue_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_idle", "block_queues",
+                                             "interpret"))
+def maxweight_claim_pallas(queues: jnp.ndarray, queue_rack: jnp.ndarray,
+                           idle_servers: jnp.ndarray, idle_rack: jnp.ndarray,
+                           est_rates: jnp.ndarray, *, block_idle: int = 128,
+                           block_queues: int = 512, interpret: bool = False):
+    """Padded, tiled argmax claims.  See ref.maxweight_claim for semantics.
+    Padding queues must carry Q=0 (masked), padding idle rows are sliced off
+    by ops.maxweight_claim."""
+    b = idle_servers.shape[0]
+    n = queues.shape[0]
+    grid = (b // block_idle, n // block_queues)
+
+    kernel = functools.partial(_claim_kernel, block_n=block_queues)
+    score, queue = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_queues,), lambda i, j: (j,)),
+            pl.BlockSpec((block_queues,), lambda i, j: (j,)),
+            pl.BlockSpec((block_idle,), lambda i, j: (i,)),
+            pl.BlockSpec((block_idle,), lambda i, j: (i,)),
+            pl.BlockSpec((block_idle, 3), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_idle,), lambda i, j: (i,)),
+            pl.BlockSpec((block_idle,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queues.astype(jnp.float32), queue_rack.astype(jnp.int32),
+      idle_servers.astype(jnp.int32), idle_rack.astype(jnp.int32),
+      est_rates.astype(jnp.float32))
+    return queue, score

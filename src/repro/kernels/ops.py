@@ -1,0 +1,107 @@
+"""Public jit'd wrappers for the Pallas kernels: padding to block multiples,
+CPU interpret-mode fallback, and shape plumbing.
+
+On TPU the kernels run compiled; everywhere else (this CPU container, unit
+tests) they run with ``interpret=True`` which executes the kernel body in
+Python/XLA-CPU with identical semantics — that is how correctness is
+validated against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import maxweight as _mw
+from repro.kernels import ref
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import wwl_route as _wwl
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int, value):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def wwl_route(workload, est_rates, server_rack, task_locals, *,
+              block_tasks: int = 128, block_servers: int = 512,
+              interpret: bool | None = None):
+    """Batched Balanced-PANDAS routing. See ref.wwl_route for semantics.
+
+    Accepts arbitrary B, M; pads internally (padding servers get +inf
+    workload and rate 1 so they never win the argmin).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, m = task_locals.shape[0], workload.shape[0]
+    bs = min(block_servers, _round_up(m, 128))
+    bt = min(block_tasks, _round_up(b, 8))
+    wl = _pad_to(jnp.asarray(workload, jnp.float32), bs, 0, np.float32(3e38))
+    er = _pad_to(jnp.asarray(est_rates, jnp.float32), bs, 0, 1.0)
+    sr = _pad_to(jnp.asarray(server_rack, jnp.int32), bs, 0, np.int32(2**30))
+    tl = _pad_to(jnp.asarray(task_locals, jnp.int32), bt, 0, 0)
+    server, tier, score = _wwl.wwl_route_pallas(
+        wl, er, sr, tl, block_tasks=bt, block_servers=bs, interpret=interpret)
+    return server[:b], tier[:b], score[:b]
+
+
+def maxweight_claim(queues, queue_rack, idle_servers, idle_rack, est_rates, *,
+                    block_idle: int = 128, block_queues: int = 512,
+                    interpret: bool | None = None):
+    """Batched JSQ-MaxWeight claims. See ref.maxweight_claim. Padding queues
+    carry Q=0 (masked out); padding idle rows sliced off."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, n = idle_servers.shape[0], queues.shape[0]
+    bq = min(block_queues, _round_up(n, 128))
+    bi = min(block_idle, _round_up(b, 8))
+    q = _pad_to(jnp.asarray(queues, jnp.float32), bq, 0, 0.0)
+    qr = _pad_to(jnp.asarray(queue_rack, jnp.int32), bq, 0, np.int32(2**30))
+    ids = _pad_to(jnp.asarray(idle_servers, jnp.int32), bi, 0, 0)
+    ir = _pad_to(jnp.asarray(idle_rack, jnp.int32), bi, 0, np.int32(2**30 - 1))
+    er = _pad_to(jnp.asarray(est_rates, jnp.float32), bi, 0, 1.0)
+    queue, score = _mw.maxweight_claim_pallas(
+        q, qr, ids, ir, er, block_idle=bi, block_queues=bq,
+        interpret=interpret)
+    return queue[:b], score[:b]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """Block-wise online-softmax attention (GQA/SWA/softcap).
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D).  See ref.mha for semantics.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def ssd(x, a, b, c, init_state=None, *, block_t: int = 128,
+        interpret: bool | None = None):
+    """Mamba-2 SSD chunked scan.  See ref.ssd for semantics."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _ssd.ssd_chunked(x, a, b, c, init_state=init_state,
+                            block_t=block_t, interpret=interpret)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# Re-exported oracles for convenience in tests/benchmarks.
+reference = ref

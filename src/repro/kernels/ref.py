@@ -1,0 +1,139 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: kernel tests sweep shapes/dtypes and
+assert_allclose against these functions.  They are also the fallback path on
+backends where the kernels are not worth launching (tiny shapes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- wwl_route ---
+
+def wwl_route(workload: jnp.ndarray, est_rates: jnp.ndarray,
+              server_rack: jnp.ndarray, task_locals: jnp.ndarray):
+    """Batched Balanced-PANDAS routing against a workload snapshot.
+
+    workload:    (M,)   f32  estimated weighted workload per server
+    est_rates:   (M,3)  f32  per-server estimated (alpha, beta, gamma)
+    server_rack: (M,)   i32  rack id per server
+    task_locals: (B,3)  i32  local servers per task
+
+    Returns (server (B,) i32, tier (B,) i32 in {0 local,1 rack,2 remote},
+    score (B,) f32).  Ties break to the lowest server index (deterministic;
+    the sequential simulator keeps the paper's random tie-breaking).
+    """
+    m = workload.shape[0]
+    sid = jnp.arange(m, dtype=task_locals.dtype)
+    local = jnp.any(sid[None, :, None] == task_locals[:, None, :], axis=-1)
+    task_racks = server_rack[task_locals]  # (B,3)
+    rack = jnp.any(server_rack[None, :, None] == task_racks[:, None, :],
+                   axis=-1) & ~local
+    tier = jnp.where(local, 0, jnp.where(rack, 1, 2)).astype(jnp.int32)
+    rate = jnp.where(local, est_rates[None, :, 0],
+                     jnp.where(rack, est_rates[None, :, 1],
+                               est_rates[None, :, 2]))
+    score = workload[None, :] / rate  # (B, M)
+    server = jnp.argmin(score, axis=1).astype(jnp.int32)
+    b = jnp.arange(task_locals.shape[0])
+    return server, tier[b, server], score[b, server]
+
+
+# ------------------------------------------------------------- maxweight ---
+
+def maxweight_claim(queues: jnp.ndarray, queue_rack: jnp.ndarray,
+                    idle_servers: jnp.ndarray, idle_rack: jnp.ndarray,
+                    est_rates: jnp.ndarray):
+    """Batched JSQ-MaxWeight claim scoring against a queue snapshot.
+
+    queues:       (N,)  f32/i32 queue lengths
+    queue_rack:   (N,)  i32     rack of each queue's owner
+    idle_servers: (B,)  i32     ids of idle servers
+    idle_rack:    (B,)  i32     rack of each idle server
+    est_rates:    (B,3) f32     estimated rates per idle server
+
+    Returns (queue (B,) i32, score (B,) f32): argmax_n w(m,n) * Q_n with
+    empty queues masked to -inf.  Lowest-index tie-break.
+    """
+    n = queues.shape[0]
+    qid = jnp.arange(n, dtype=idle_servers.dtype)
+    is_self = idle_servers[:, None] == qid[None, :]
+    same_rack = idle_rack[:, None] == queue_rack[None, :]
+    w = jnp.where(is_self, est_rates[:, 0:1],
+                  jnp.where(same_rack, est_rates[:, 1:2], est_rates[:, 2:3]))
+    score = jnp.where(queues[None, :] > 0, w * queues[None, :], -jnp.inf)
+    queue = jnp.argmax(score, axis=1).astype(jnp.int32)
+    b = jnp.arange(idle_servers.shape[0])
+    return queue, score[b, queue]
+
+
+# ------------------------------------------------------- flash attention ---
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, window: int = 0, softcap: float = 0.0,
+        scale: float | None = None) -> jnp.ndarray:
+    """Reference multi-head attention with GQA, sliding window and softcap.
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D) with Hq % Hkv == 0.
+    window > 0 -> sliding-window causal attention of that width.
+    softcap > 0 -> logits = softcap * tanh(logits / softcap) (Gemma-2).
+    Decode is Tq == 1 against a Tk-long cache (pass causal=False and mask via
+    kv_len semantics upstream).
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qr = q.reshape(b, hkv, group, tq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    tk = k.shape[2]
+    qpos = jnp.arange(tq)[:, None] + (tk - tq)  # align cache offsets
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, tq, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------- ssd scan ---
+
+def ssd(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+        init_state: jnp.ndarray | None = None):
+    """Reference Mamba-2 SSD (state-space dual) recurrence, sequential form.
+
+    x: (B, T, H, P)   inputs per head (P = head dim)
+    a: (B, T, H)      per-step log-decay (a_t = exp(log_a) in (0,1])
+    b: (B, T, N)      input projection onto state (N = state dim)
+    c: (B, T, N)      output projection
+    init_state: (B, H, P, N) or None.
+
+    h_t = a_t * h_{t-1} + x_t (outer) b_t ;  y_t = h_t @ c_t
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, at, bt, ct = inp
+        state = state * at[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt.astype(jnp.float32), bt.astype(jnp.float32))
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, yt
+
+    xs = (x.swapaxes(0, 1), jnp.exp(a).swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1), c.swapaxes(0, 1))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), final

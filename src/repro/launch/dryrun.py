@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct stand-ins (no allocation), prove the
+sharding config is coherent, and extract the roofline terms.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+          --mesh both --out experiments/dryrun
+
+The XLA_FLAGS line above MUST execute before any jax import (device count
+locks at first init); do not move it.
+"""
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import registry, runtime  # noqa: E402
+from repro.configs.shapes import SHAPES, applicable  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.models.config import active_param_count, param_count  # noqa: E402
+from repro.utils import hlo as hlo_lib  # noqa: E402
+from repro.utils import roofline as rl  # noqa: E402
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (lowered, meta) for one cell."""
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    plan = runtime.plan_for(cfg, shape_name, shape.kind,
+                            dp_axes=mesh_lib.dp_axes(mesh))
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind}
+    with mesh:
+        if shape.kind == "train":
+            fn, astate, abatch, _ = steps_lib.build_train_step(
+                cfg, mesh, plan, shape.global_batch, shape.seq_len)
+            lowered = fn.lower(astate, abatch)
+        elif shape.kind == "prefill":
+            fn, (ap, ac, ab), _ = steps_lib.build_prefill_step(
+                cfg, mesh, plan, shape.global_batch, shape.seq_len)
+            lowered = fn.lower(ap, ac, ab)
+        else:
+            fn, (ap, ac, ab), _ = steps_lib.build_serve_step(
+                cfg, mesh, plan, shape.global_batch, shape.seq_len)
+            lowered = fn.lower(ap, ac, ab)
+    return lowered, mesh, cfg, shape, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False) -> dict:
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": skip}
+
+    t0 = time.time()
+    try:
+        lowered, mesh, cfg, shape, meta = lower_cell(arch, shape_name,
+                                                     multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # a failure here is a bug in the system
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+    n_dev = mesh.devices.size
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    pod_boundary = 256 if multi_pod else None
+    rep = hlo_lib.analyze(text, pod_boundary=pod_boundary)
+
+    # ---- useful model FLOPs ----
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        attn = rl.attention_flops("train", cfg, shape.seq_len,
+                                  shape.global_batch)
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        attn = rl.attention_flops("serve", cfg, shape.seq_len,
+                                  shape.global_batch)
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        attn = rl.attention_flops("serve", cfg, shape.seq_len,
+                                  shape.global_batch, decode=True)
+    mflops = rl.model_flops(
+        "train" if shape.kind == "train" else "serve", n_active, tokens, attn)
+
+    # Analytic minimum HBM traffic (global): params once (x3 for train:
+    # fwd read, bwd read, grad+opt update), caches once, activation stream.
+    p_bytes = 2.0 * param_count(cfg)
+    d_model = cfg.d_model
+    act_stream = 2.0 * tokens * d_model * max(cfg.num_layers, 1) * 2
+    if shape.kind == "train":
+        mbytes = 3.0 * p_bytes + 2.0 * act_stream
+    elif shape.kind == "prefill":
+        mbytes = p_bytes + act_stream
+    else:
+        cache_bytes = _tree_bytes_for(arch, shape, multi_pod)
+        mbytes = p_bytes + cache_bytes + 2.0 * tokens * d_model * 2
+
+    roof = rl.Roofline(
+        flops_per_device=rep.flops,
+        hbm_bytes_per_device=rep.bytes,
+        ici_bytes_per_device=rep.collective_bytes - rep.dcn_bytes,
+        dcn_bytes_per_device=rep.dcn_bytes,
+        model_flops_per_device=mflops / n_dev,
+        model_bytes_per_device=mbytes / n_dev,
+    )
+
+    arg_b = ma.argument_size_in_bytes
+    out_b = ma.output_size_in_bytes
+    tmp_b = ma.temp_size_in_bytes
+    alias_b = ma.alias_size_in_bytes
+    peak = arg_b + out_b + tmp_b - alias_b
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "status": "ok",
+        "devices": n_dev,
+        "params_total": param_count(cfg),
+        "params_active": active_param_count(cfg),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": arg_b, "output_bytes": out_b,
+            "temp_bytes": tmp_b, "alias_bytes": alias_b,
+            "peak_bytes_per_device": peak,
+            "fits_16gb": bool(peak <= rl.HBM_PER_CHIP),
+        },
+        "cost_analysis": {k: ca.get(k) for k in ("flops", "bytes accessed")
+                          if k in ca},
+        "hlo": {
+            "flops_per_device": rep.flops,
+            "hbm_bytes_per_device": rep.bytes,
+            "collective_bytes_per_device": rep.collective_bytes,
+            "dcn_bytes_per_device": rep.dcn_bytes,
+            "collective_counts": rep.coll_counts,
+            "collective_bytes_by_kind": rep.coll_bytes,
+        },
+        "roofline": roof.as_dict(),
+    }
+    if keep_hlo:
+        result["hlo_text_bytes"] = len(text)
+    return result
+
+
+def _tree_bytes_for(arch: str, shape, multi_pod: bool) -> float:
+    """Global cache bytes (k+v+state read once per decode step)."""
+    import numpy as np
+    from repro.models import transformer as T
+    cfg = registry.get_config(arch)
+    ac = T.abstract_caches(cfg, shape.global_batch, shape.seq_len,
+                           enc_len=cfg.num_audio_frames)
+    return float(sum(np.prod(x.shape) * x.dtype.itemsize
+                     for x in jax.tree.leaves(ac)))
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"{r['arch']:16s} {r['shape']:12s} {r['mesh']:8s} SKIP "
+                f"({r['reason'][:60]}...)")
+    if r["status"] == "FAILED":
+        return (f"{r['arch']:16s} {r['shape']:12s} {r['mesh']:8s} FAIL "
+                f"{r['error'][:80]}")
+    ro = r["roofline"]
+    return (f"{r['arch']:16s} {r['shape']:12s} {r['mesh']:8s} "
+            f"mem={r['memory']['peak_bytes_per_device'] / 1e9:6.2f}GB"
+            f"{'✓' if r['memory']['fits_16gb'] else '✗'} "
+            f"C={ro['compute_s'] * 1e3:9.3f}ms "
+            f"M={ro['memory_s'] * 1e3:9.3f}ms "
+            f"X={ro['collective_s'] * 1e3:9.3f}ms "
+            f"dom={ro['dominant'][:4]} "
+            f"useful={ro['useful_flops_fraction']:5.1%} "
+            f"roof={ro['roofline_fraction']:5.1%} "
+            f"[{r['compile_s']:.0f}s compile]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                r = run_cell(arch, shape, multi)
+                n_fail += r["status"] == "FAILED"
+                print(fmt_row(r), flush=True)
+                name = f"{arch}__{shape}__{r['mesh'].replace('x', '_')}.json"
+                (outdir / name).write_text(json.dumps(r, indent=1))
+    print(f"\ndone; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

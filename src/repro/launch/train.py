@@ -1,0 +1,54 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains reduced (smoke) configs end-to-end with the
+full substrate stack (pipeline -> sharded step -> checkpoints).  On a real
+fleet the same entry point runs the full config on the production mesh
+(--full --multi-pod).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3_6b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (production) config, not the smoke one")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x2 for a local test mesh (default: 1x1)")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import registry, runtime
+    from repro.launch import mesh as mesh_lib
+    from repro.launch.steps import RuntimePlan
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = (registry.get_config(args.arch) if args.full
+           else registry.get_smoke_config(args.arch))
+    if args.multi_pod or (args.full and args.mesh is None):
+        mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        shape = tuple(int(x) for x in (args.mesh or "1x1").split("x"))
+        mesh = mesh_lib.make_test_mesh(shape, ("data", "model"))
+    plan = runtime.plan_for(cfg, "train_4k", "train",
+                            dp_axes=mesh_lib.dp_axes(mesh))
+    trainer = Trainer(cfg, TrainerConfig(
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        steps=args.steps, ckpt_dir=args.ckpt_dir), mesh, plan)
+    hist = trainer.run()
+    for rec in hist:
+        print(f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+              f"gnorm {rec['grad_norm']:.3f} {rec['wall_s'] * 1e3:.0f}ms "
+              f"locality {tuple(round(x, 2) for x in rec['data_locality'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Mamba-2 block (SSD layer) — used by mamba2-1.3b and the Mamba sub-layers
+of jamba.
+
+Note (DESIGN.md §Arch-applicability): Jamba's original Mamba-1 layers are
+modeled with Mamba-2 SSD blocks of the same state size.  The SSD dual form is
+the TPU-native formulation (chunked matmuls on the MXU instead of a
+per-channel sequential selective scan); state dimensions and parameter
+budgets match.
+
+Cache layout (decode): {"ssm": (B, H, P, N) f32, "conv": (B, K-1, C)}.
+Constant-size state is what makes long_500k decode O(1) per token.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm_ops
+from repro.models.config import ModelConfig
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    din = ssm.d_inner(d)
+    gn = ssm.n_groups * ssm.d_state
+    h = ssm.num_heads(d)
+    return {
+        "ssm": jnp.zeros((batch, h, ssm.head_dim, ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, ssm.conv_kernel - 1, din + 2 * gn), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    ssm = cfg.ssm
+    din = ssm.d_inner(cfg.d_model)
+    gn = ssm.n_groups * ssm.d_state
+    h = ssm.num_heads(cfg.d_model)
+    z, xs, b, c, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + gn, 2 * din + 2 * gn], axis=-1)
+    assert dt.shape[-1] == h
+    return z, xs, b, c, dt
+
+
+def mamba_block(p: Dict[str, Any], cfg: ModelConfig, x: jnp.ndarray,
+                cache: Optional[Dict[str, Any]] = None, ctx=None,
+                use_kernel: bool = False) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Full-sequence Mamba-2 block.  x: (B, T, d).  If `cache` is given and
+    T == 1, runs the O(1) decode step instead."""
+    mp = p["mamba"]
+    ssm = cfg.ssm
+    bsz, t, d = x.shape
+    din = ssm.d_inner(d)
+    gn = ssm.n_groups * ssm.d_state
+    h = ssm.num_heads(d)
+
+    proj = x @ mp["in_proj"].astype(x.dtype)        # (B,T,2din+2gn+H)
+    z, xs, b, c, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)  # (B,T,din+2gn)
+    if cache is not None and t == 1:
+        conv_out, conv_state = ssm_ops.causal_conv_step(
+            conv_in[:, 0], cache["conv"], mp["conv_w"], mp["conv_b"])
+        conv_out = conv_out[:, None, :]
+    else:
+        conv_out = ssm_ops.causal_conv(conv_in, mp["conv_w"], mp["conv_b"])
+        conv_state = conv_in[:, -(ssm.conv_kernel - 1):] if cache is not None \
+            else None
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, b, c = jnp.split(conv_out, [din, din + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + mp["dt_bias"].astype(jnp.float32))   # (B,T,H)
+    a_log_t = -jnp.exp(mp["a_log"].astype(jnp.float32)) * dt    # <= 0
+    heads = xs.reshape(bsz, t, h, ssm.head_dim)
+    x_eff = heads * dt[..., None].astype(x.dtype)
+
+    if cache is not None and t == 1:
+        y, ssm_state = ssm_ops.ssd_decode_step(
+            x_eff[:, 0], a_log_t[:, 0], b[:, 0], c[:, 0], cache["ssm"])
+        y = y[:, None]
+    elif use_kernel:
+        from repro.kernels import ops as kops
+        y, ssm_state = kops.ssd(x_eff, a_log_t, b, c,
+                                init_state=cache["ssm"] if cache else None,
+                                block_t=ssm.chunk)
+    else:
+        y, ssm_state = ssm_ops.ssd_chunked_jnp(
+            x_eff, a_log_t, b, c,
+            init_state=cache["ssm"] if cache else None, chunk=ssm.chunk)
+
+    y = y + heads * mp["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, t, din)
+
+    # Gated RMSNorm (Mamba-2): norm(y * silu(z)) * scale.
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(ms + 1e-6) * mp["gate_norm_scale"].astype(jnp.float32)
+    out = g.astype(x.dtype) @ mp["out_proj"].astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": ssm_state, "conv": conv_state}
+    return out, new_cache

@@ -1,0 +1,231 @@
+"""Parameter-tree machinery: one structure definition drives three views.
+
+Every parameter is declared once as a `ParamDef` (shape + logical axes +
+init rule).  From that single tree we derive:
+
+  * `init_params`     — materialized jnp arrays (smoke tests / real training)
+  * `abstract_params` — ShapeDtypeStructs, NO allocation (multi-pod dry-run)
+  * `logical_axes`    — logical-axis tuples consumed by sharding/rules.py
+
+Logical axis vocabulary: "vocab", "embed", "q_heads", "kv_heads", "mlp",
+"experts", "ssm_inner", "ssm_state", "conv", "pos", "layers" (stacked scan
+dim — never sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    init: str = "normal"       # normal | zeros | ones | embed | a_log | dt_bias
+    fan_in_dims: Tuple[int, ...] = (0,)  # dims treated as fan-in for scaling
+
+
+def _norm_defs(cfg: ModelConfig, name: str) -> Dict[str, ParamDef]:
+    d = {f"{name}_scale": ParamDef((cfg.d_model,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        d[f"{name}_bias"] = ParamDef((cfg.d_model,), ("embed",), "zeros")
+    return d
+
+
+def _attn_defs(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, ParamDef]:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    defs: Dict[str, ParamDef] = {
+        "wq": ParamDef((d, qd), ("embed", "q_heads")),
+        "wk": ParamDef((d, kvd), ("embed", "kv_heads")),
+        "wv": ParamDef((d, kvd), ("embed", "kv_heads")),
+        "wo": ParamDef((qd, d), ("q_heads", "embed")),
+    }
+    if cfg.attn_bias:
+        defs["bq"] = ParamDef((qd,), ("q_heads",), "zeros")
+        defs["bk"] = ParamDef((kvd,), ("kv_heads",), "zeros")
+        defs["bv"] = ParamDef((kvd,), ("kv_heads",), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((cfg.head_dim,), (None,), "ones")
+        defs["k_norm"] = ParamDef((cfg.head_dim,), (None,), "ones")
+    if spec.cross:
+        defs.update({
+            "xq": ParamDef((d, qd), ("embed", "q_heads")),
+            "xk": ParamDef((d, kvd), ("embed", "kv_heads")),
+            "xv": ParamDef((d, kvd), ("embed", "kv_heads")),
+            "xo": ParamDef((qd, d), ("q_heads", "embed")),
+        })
+    return defs
+
+
+def _mlp_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamDef((d, ff), ("embed", "mlp")),
+            "w_up": ParamDef((d, ff), ("embed", "mlp")),
+            "w_down": ParamDef((ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": ParamDef((d, ff), ("embed", "mlp")),
+        "w_down": ParamDef((ff, d), ("mlp", "embed")),
+    }
+
+
+def _moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    defs = {"router": ParamDef((d, e), ("embed", None))}
+    if cfg.act in ("swiglu", "geglu"):
+        defs.update({
+            "w_gate": ParamDef((e, d, ff), ("experts", "embed", "mlp"),
+                               fan_in_dims=(1,)),
+            "w_up": ParamDef((e, d, ff), ("experts", "embed", "mlp"),
+                             fan_in_dims=(1,)),
+            "w_down": ParamDef((e, ff, d), ("experts", "mlp", "embed"),
+                               fan_in_dims=(1,)),
+        })
+    else:
+        defs.update({
+            "w_up": ParamDef((e, d, ff), ("experts", "embed", "mlp"),
+                             fan_in_dims=(1,)),
+            "w_down": ParamDef((e, ff, d), ("experts", "mlp", "embed"),
+                               fan_in_dims=(1,)),
+        })
+    return defs
+
+
+def _mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    din = ssm.d_inner(d)
+    gn = ssm.n_groups * ssm.d_state
+    h = ssm.num_heads(d)
+    conv_dim = din + 2 * gn
+    return {
+        "in_proj": ParamDef((d, 2 * din + 2 * gn + h), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((ssm.conv_kernel, conv_dim), ("conv", "ssm_inner"),
+                           "normal", fan_in_dims=(0,)),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), "zeros"),
+        "a_log": ParamDef((h,), (None,), "a_log"),
+        "d_skip": ParamDef((h,), (None,), "ones"),
+        "dt_bias": ParamDef((h,), (None,), "dt_bias"),
+        "gate_norm_scale": ParamDef((din,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDef((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def layer_defs(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {}
+    defs.update(_norm_defs(cfg, "ln1"))
+    if spec.kind == "attn":
+        defs["attn"] = _attn_defs(cfg, spec)
+        if spec.cross:
+            defs.update(_norm_defs(cfg, "ln_cross"))
+    else:
+        defs["mamba"] = _mamba_defs(cfg)
+    if spec.moe or cfg.d_ff > 0:  # mamba2-style layers have no MLP block
+        defs.update(_norm_defs(cfg, "ln2"))
+        defs["moe" if spec.moe else "mlp"] = (_moe_defs(cfg) if spec.moe
+                                              else _mlp_defs(cfg))
+        if cfg.post_norm:
+            defs.update(_norm_defs(cfg, "post2"))
+    if cfg.post_norm:
+        defs.update(_norm_defs(cfg, "post1"))
+    return defs
+
+
+def _stack(defs: Dict[str, Any], repeats: int) -> Dict[str, Any]:
+    """Add the leading stacked-layer axis for scan."""
+    def f(d: ParamDef) -> ParamDef:
+        return ParamDef((repeats,) + d.shape, ("layers",) + d.axes, d.init,
+                        tuple(x + 1 for x in d.fan_in_dims))
+    return jax.tree.map(f, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def stage_defs(cfg: ModelConfig, stage: Stage) -> Dict[str, Any]:
+    return _stack({f"sub{i}": layer_defs(cfg, sl)
+                   for i, sl in enumerate(stage.block)}, stage.repeats)
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                          "embed"),
+        "stages": {f"stage{i}": stage_defs(cfg, st)
+                   for i, st in enumerate(cfg.stages)},
+    }
+    defs.update(_norm_defs(cfg, "final"))
+    if cfg.enc_stages:
+        defs["enc_stages"] = {f"stage{i}": stage_defs(cfg, st)
+                              for i, st in enumerate(cfg.enc_stages)}
+        defs.update(_norm_defs(cfg, "enc_final"))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                                   ("embed", "vocab"))
+    if cfg.learned_pos:
+        defs["pos_embed"] = ParamDef((cfg.learned_pos, cfg.d_model),
+                                     ("pos", "embed"), "embed")
+        if cfg.enc_stages:
+            defs["enc_pos_embed"] = ParamDef(
+                (max(cfg.num_audio_frames, 1), cfg.d_model),
+                ("pos", "embed"), "embed")
+    return defs
+
+
+# ---------------------------------------------------------------- views ----
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """ShapeDtypeStruct tree — used by the dry-run; allocates nothing."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dt),
+                        model_defs(cfg), is_leaf=_is_def)
+
+
+def logical_axes(cfg: ModelConfig):
+    return jax.tree.map(lambda d: d.axes, model_defs(cfg), is_leaf=_is_def)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=None):
+    """Materialize parameters (smoke tests, real training of small models)."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    defs = model_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(d: ParamDef, k) -> jnp.ndarray:
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        if d.init == "a_log":
+            # Mamba-2: A in [1, 16) -> a_log = log(A); decay = -exp(a_log)*dt.
+            u = jax.random.uniform(k, d.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dt)
+        if d.init == "dt_bias":
+            # inverse-softplus of dt ~ U(1e-3, 1e-1)
+            u = jax.random.uniform(k, d.shape, jnp.float32, 1e-3, 1e-1)
+            return jnp.log(jnp.expm1(u)).astype(dt)
+        if d.init == "embed":
+            return (jax.random.normal(k, d.shape, jnp.float32) * 0.02).astype(dt)
+        fan_in = max(int(np.prod([d.shape[i] for i in d.fan_in_dims])), 1)
+        std = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dt)
+
+    params = [make(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, params)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

@@ -1,0 +1,99 @@
+"""Pure-XLA chunked SSD used inside model forward passes.
+
+Same math as kernels/ssd_scan.py (the Pallas TPU kernel), expressed as
+einsums over (chunks, L, L) tiles with a lax.scan carrying the chunk-to-chunk
+state.  This path is what the dry-run lowers (Pallas doesn't lower to the
+host backend) and doubles as an independent implementation cross-checked
+against both ref.ssd and the kernel in tests.
+
+Shapes: x (B,T,H,P), a_log (B,T,H) <= 0, b,c (B,T,N); returns
+(y (B,T,H,P), final_state (B,H,P,N)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked_jnp(x, a_log, b, c, init_state=None, *, chunk: int = 128):
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    lt = min(chunk, t)
+    pad = (-t) % lt
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (t + pad) // lt
+
+    xf = x.reshape(bsz, nc, lt, h, p).astype(jnp.float32)
+    al = a_log.reshape(bsz, nc, lt, h).astype(jnp.float32)
+    bf = b.reshape(bsz, nc, lt, n).astype(jnp.float32)
+    cf = c.reshape(bsz, nc, lt, n).astype(jnp.float32)
+
+    lcum = jnp.cumsum(al, axis=2)                     # (B,nc,L,H)
+    total = lcum[:, :, -1]                            # (B,nc,H)
+
+    # Intra-chunk: y[l] = sum_{s<=l} exp(lcum[l]-lcum[s]) <c_l, b_s> x_s
+    cb = jnp.einsum("bcln,bcsn->bcls", cf, bf)        # shared across heads
+    ldiff = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]   # (B,nc,L,L,H)
+    tri = (jnp.arange(lt)[:, None] >= jnp.arange(lt)[None, :])
+    decay = jnp.where(tri[None, None, :, :, None],
+                      jnp.exp(jnp.minimum(ldiff, 0.0)), 0.0)
+    y_intra = jnp.einsum("bcls,bclsh,bcshp->bclhp", cb, decay, xf)
+
+    # Inter-chunk state: inj_c = sum_s exp(total-lcum[s]) x_s b_s^T
+    w = jnp.exp(total[:, :, None, :] - lcum)          # (B,nc,L,H)
+    inj = jnp.einsum("bclh,bclhp,bcln->bchpn", w, xf, bf)
+    cdecay = jnp.exp(total)                           # (B,nc,H)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        dec_c, inj_c = inp                            # (B,H), (B,H,P,N)
+        out = state                                   # state BEFORE this chunk
+        state = state * dec_c[:, :, None, None] + inj_c
+        return state, out
+
+    final, h_prev = jax.lax.scan(
+        step, init_state.astype(jnp.float32),
+        (cdecay.swapaxes(0, 1), inj.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                    # (B,nc,H,P,N)
+
+    y_state = jnp.einsum("bclh,bcln,bchpn->bclhp",
+                         jnp.exp(lcum), cf, h_prev)
+    y = (y_intra + y_state).reshape(bsz, nc * lt, h, p)[:, :t]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x, a_log, b, c, state):
+    """Single-token SSD update: x (B,H,P), a_log (B,H), b,c (B,N),
+    state (B,H,P,N) -> (y (B,H,P), new_state)."""
+    dec = jnp.exp(a_log.astype(jnp.float32))[:, :, None, None]
+    state = state * dec + jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32),
+                                     b.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+def causal_conv(x, w, bias):
+    """Depthwise causal conv: x (B,T,C), w (K,C), bias (C,)."""
+    k, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=c)
+    return (out + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_conv_step(x_new, conv_state, w, bias):
+    """Decode-time conv: x_new (B,C), conv_state (B,K-1,C) holding the last
+    K-1 inputs -> (y (B,C), new_state)."""
+    k = w.shape[0]
+    full = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32),
+                   w.astype(jnp.float32)) + bias.astype(jnp.float32)
+    return y.astype(x_new.dtype), full[:, 1:]

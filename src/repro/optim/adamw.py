@@ -1,0 +1,111 @@
+"""AdamW with shard-friendly state and configurable moment dtype.
+
+Optimizer state mirrors the parameter pytree (same shapes, same shardings →
+ZeRO-1/3 falls out of the FSDP param sharding for free).  `moment_dtype`
+trades memory for precision: the ≥100B configs (jamba) run bf16 moments to
+fit the single-pod HBM budget (see DESIGN.md §6 memory policy); everything
+else defaults to f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    # dtype of the update arithmetic; bf16 for >=100B models halves the
+    # optimizer's transient f32 working set (peak-memory critical)
+    update_dtype: str = "float32"
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_frac * peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(count=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def abstract_state(cfg: AdamWConfig, abstract_params: Any) -> AdamWState:
+    """ShapeDtypeStruct view (dry-run)."""
+    dt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return AdamWState(count=jax.ShapeDtypeStruct((), jnp.int32),
+                      mu=jax.tree.map(z, abstract_params),
+                      nu=jax.tree.map(z, abstract_params))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads: Any, state: AdamWState, params: Any,
+           lr: Optional[jnp.ndarray] = None):
+    """Returns (new_params, new_state, metrics)."""
+    count = state.count + 1
+    if lr is None:
+        lr = lr_schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    mdt = jnp.dtype(cfg.moment_dtype)
+    udt = jnp.dtype(cfg.update_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = (1 - b1 ** c).astype(udt)
+    bc2 = (1 - b2 ** c).astype(udt)
+
+    def upd(g, m, v, p):
+        g = g.astype(udt) * scale.astype(udt)
+        mu = (b1 * m.astype(udt) + (1 - b1) * g)
+        nu = (b2 * v.astype(udt) + (1 - b2) * jnp.square(g))
+        step = (mu / bc1) * jax.lax.rsqrt(
+            jnp.maximum(nu / bc2, jnp.asarray(cfg.eps ** 2, udt)))
+        if cfg.weight_decay > 0 and p.ndim >= 2:  # no decay on norms/biases
+            step = step + cfg.weight_decay * p.astype(udt)
+        new_p = p.astype(udt) - lr.astype(udt) * step
+        return new_p.astype(p.dtype), mu.astype(mdt), nu.astype(mdt)
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(count, new_mu, new_nu), metrics

@@ -1,0 +1,238 @@
+"""Continuous-batching serving engine with a Balanced-PANDAS request router.
+
+Cluster model (the paper's data center, one level up the stack):
+  * R replica groups ("servers"), grouped into pods ("racks");
+  * every request carries a prefix id whose KV/prompt artifacts are resident
+    on 3 replicas (rendezvous placement) — those are its *local* replicas;
+    same-pod replicas are *rack-local* (prefix transfer over ICI), the rest
+    *remote* (DCN);
+  * the router assigns each incoming request to a replica by weighted
+    workload over estimated service rates; rates are measured online per
+    (replica, tier) with the EWMA estimator (Blind GB-PANDAS), so a slow or
+    throttled replica sheds load without any configuration — the robustness
+    property the paper measures is what makes this safe.
+
+The engine actually runs the model: per-replica prefill (bucketed lengths to
+bound recompiles) and batched decode steps over slotted KV caches with
+per-slot lengths.  JSQ-MaxWeight and FIFO are selectable baselines; the
+robustness experiment at the serving level lives in
+benchmarks/bench_serving.py and examples/serve_cluster.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cluster import ClusterSpec, ROUTERS, tier_of
+from repro.core.estimator import EwmaRateEstimator
+from repro.data.pipeline import chunk_replicas
+from repro.models import params as params_lib, transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (T,) int32
+    max_new_tokens: int
+    prefix_id: int = 0
+    arrival: float = 0.0
+    # filled by the engine
+    replica: int = -1
+    tier: int = -1
+    generated: Optional[List[int]] = None
+    finish_time: float = 0.0
+    start_time: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    num_replicas: int = 4
+    replicas_per_pod: int = 2
+    slots_per_replica: int = 4
+    max_len: int = 256
+    prefill_buckets: Sequence[int] = (32, 64, 128)
+    scheduler: str = "balanced_pandas"
+    # prior service rates (requests/step) per tier; measured online
+    rate_local: float = 1.0
+    rate_rack: float = 0.7
+    rate_remote: float = 0.4
+    seed: int = 0
+
+
+class Replica:
+    """One replica group: slotted KV caches + jitted prefill/decode."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        b = ecfg.slots_per_replica
+        self.caches = T.init_caches(cfg, b, ecfg.max_len)
+        self.lengths = np.zeros(b, np.int64)
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self._decode = jax.jit(
+            lambda p, tok, ln, c: T.decode_step(p, cfg, tok, ln, c))
+        self._prefill = {}
+
+    def free_slots(self) -> int:
+        return sum(r is None for r in self.slot_req)
+
+    def admit(self, req: Request) -> None:
+        slot = self.slot_req.index(None)
+        self.slot_req[slot] = req
+        t = min(len(req.prompt), self.ecfg.max_len - req.max_new_tokens - 1)
+        bucket = next((b for b in self.ecfg.prefill_buckets if b >= t),
+                      self.ecfg.prefill_buckets[-1])
+        t = min(t, bucket)
+        prompt = np.zeros(bucket, np.int32)
+        prompt[:t] = req.prompt[-t:]
+        # Right-padded: pad positions are negative -> masked during prefill
+        # and committed into invalid (-marked) ring slots.
+        pos = np.where(np.arange(bucket) < t, np.arange(bucket),
+                       -(np.arange(bucket) - t + 1)).astype(np.int32)
+        if bucket not in self._prefill:
+            cfg, max_len = self.cfg, self.ecfg.max_len
+
+            def prefill(p, tokens, positions, last):
+                caches1 = T.init_caches(cfg, 1, max_len)
+                logits, sub, _ = T.forward(p, cfg, tokens,
+                                           positions=positions,
+                                           caches=caches1, remat=False)
+                return logits[0, last], sub
+            self._prefill[bucket] = jax.jit(prefill)
+        logits, sub = self._prefill[bucket](self.params, prompt[None],
+                                            pos[None], t - 1)
+        # merge the freshly prefilled rows into this slot (eager scatter)
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, slot:slot + 1].set(
+                one.astype(full.dtype)), self.caches, sub)
+        self.lengths[slot] = t
+        req.generated = [int(jnp.argmax(logits))]
+        req.start_time = time.monotonic()
+
+    def decode_once(self) -> None:
+        if all(r is None for r in self.slot_req):
+            return
+        tokens = np.zeros((len(self.slot_req), 1), np.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.generated:
+                tokens[i, 0] = r.generated[-1]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tokens),
+            jnp.asarray(self.lengths, jnp.int32), self.caches)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            self.lengths[i] += 1
+            r.generated.append(int(nxt[i]))
+            if (len(r.generated) > r.max_new_tokens
+                    or self.lengths[i] >= self.ecfg.max_len - 1):
+                r.finish_time = time.monotonic()
+                self.slot_req[i] = None
+                self.lengths[i] = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 slow_replicas: Optional[Dict[int, float]] = None):
+        self.cfg, self.ecfg = cfg, ecfg
+        self.spec = ClusterSpec(ecfg.num_replicas, ecfg.replicas_per_pod)
+        prior = np.array([ecfg.rate_local, ecfg.rate_rack, ecfg.rate_remote],
+                         np.float32)
+        self.estimator = EwmaRateEstimator(ecfg.num_replicas, prior)
+        self.router = ROUTERS[ecfg.scheduler](
+            self.spec, prior, estimator=self.estimator, seed=ecfg.seed)
+        self.replicas = [Replica(cfg, params, ecfg)
+                         for _ in range(ecfg.num_replicas)]
+        self.queue: deque = deque()            # not-yet-routed arrivals
+        self.waiting: List[deque] = [deque()   # routed, awaiting a slot
+                                     for _ in range(ecfg.num_replicas)]
+        self.slow = slow_replicas or {}
+        self.steps = 0
+        self.assign_tiers = {0: 0, 1: 0, 2: 0}
+
+    def submit(self, req: Request) -> None:
+        req.arrival = time.monotonic()
+        self.queue.append(req)
+
+    # -- scheduling ----------------------------------------------------------
+    def _route_arrivals(self) -> None:
+        fifo = isinstance(self.router, ROUTERS["fifo"])
+        while self.queue:
+            req = self.queue.popleft()
+            locs = chunk_replicas(req.prefix_id, self.ecfg.num_replicas, 3,
+                                  self.ecfg.seed)
+            req._locs = locs  # type: ignore[attr-defined]
+            if fifo:
+                self.router.route(locs)
+                self.waiting[0].append(req)  # single global queue
+            else:
+                replica = self.router.route(locs)
+                req.replica = replica
+                self.waiting[replica].append(req)
+
+    def _admit(self) -> None:
+        fifo = isinstance(self.router, ROUTERS["fifo"])
+        for i, rep in enumerate(self.replicas):
+            while rep.free_slots():
+                if fifo:
+                    if not self.waiting[0]:
+                        return
+                    self.router.claim(i)
+                    req = self.waiting[0].popleft()
+                    req.replica = i
+                elif self.waiting[i]:
+                    # drain this replica's routed queue (the router tracks
+                    # per-tier backlogs; pop in priority order)
+                    if hasattr(self.router, "next_task_tier"):
+                        self.router.next_task_tier(i)
+                    elif hasattr(self.router, "q"):
+                        self.router.q[i] -= 1
+                    req = self.waiting[i].popleft()
+                else:
+                    break
+                req.tier = tier_of(self.spec, req._locs, req.replica)
+                self.assign_tiers[req.tier] += 1
+                t0 = time.monotonic()
+                self.replicas[req.replica].admit(req)
+                elapsed = (time.monotonic() - t0) * self.slow.get(
+                    req.replica, 1.0)
+                self.router.on_complete(req.replica, req.tier,
+                                        max(elapsed, 1e-4))
+
+    # -- execution -----------------------------------------------------------
+    def step(self) -> None:
+        """One engine tick: route arrivals, admit into free slots, one decode
+        step on every replica."""
+        self._route_arrivals()
+        self._admit()
+        for rep in self.replicas:
+            rep.decode_once()
+        self.steps += 1
+
+    def run_until_drained(self, all_requests: Sequence[Request],
+                          max_steps: int = 10_000) -> List[Request]:
+        for r in all_requests:
+            self.submit(r)
+        outstanding = list(all_requests)
+        while any(r.finish_time == 0.0 for r in outstanding):
+            self.step()
+            if self.steps > max_steps:
+                raise RuntimeError("engine did not drain")
+        return outstanding
+
+    @property
+    def queue_depths(self) -> np.ndarray:
+        if hasattr(self.router, "q"):
+            q = np.asarray(self.router.q)
+            return q.sum(axis=-1) if q.ndim > 1 else q
+        return np.zeros(self.ecfg.num_replicas)

@@ -1,0 +1,136 @@
+"""Logical-axis sharding: one rule table maps logical axes (declared next to
+every parameter in models/params.py and at activation constraint points) to
+mesh axes, with automatic divisibility fallback.
+
+Parallelism coverage:
+  DP    — batch over ("pod", "data")
+  FSDP  — parameter "embed" dim additionally sharded over "data" (ZeRO-3;
+          per-layer all-gather amortized by the layer scan)
+  TP    — heads / mlp / vocab / ssm_inner over "model"
+  EP    — expert axis over "model" when divisible (granite 32e, jamba 16e),
+          else TP-within-expert (mixtral 8e on a 16-way model axis)
+  SP    — KV-cache sequence dim over the DP axes for long-context decode
+          (long_500k, batch=1: the batch axes are idle, the cache is not)
+
+The divisibility fallback (dim % mesh-extent != 0 -> replicate) is what lets
+one rule table serve ten architectures: gemma3's 4 q-heads or kv=1 simply
+fall back to replicated attention while its 6912-wide mlp still shards 16
+ways.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Per-run parallelism switches (chosen per arch x shape in configs/runtime)."""
+
+    fsdp: bool = True              # shard param embed-dim over data (ZeRO-3)
+    expert_parallel: str = "auto"  # "auto" | "ep" | "tp"
+    seq_shard_cache: bool = False  # SP: shard KV cache seq over DP axes
+    dp_axes: Tuple[str, ...] = ("data",)   # ("pod","data") on multi-pod
+
+
+def make_rules(policy: ShardingPolicy, *, num_experts: int = 0,
+               model_axis_size: int = 1) -> Dict[str, AxisVal]:
+    ep = (policy.expert_parallel == "ep" or
+          (policy.expert_parallel == "auto" and num_experts > 0
+           and num_experts % model_axis_size == 0))
+    dp = tuple(policy.dp_axes)
+    return {
+        # parameters
+        "vocab": "model",
+        "embed": dp if policy.fsdp else None,
+        "q_heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model" if ep else None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "conv": None,
+        "pos": None,
+        "layers": None,
+        None: None,
+        # activations
+        "act_batch": dp,
+        "act_seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_experts": "model" if ep else None,
+        "act_cap": None if ep else dp,
+        "act_cache": dp if policy.seq_shard_cache else None,
+    }
+
+
+class ShardCtx:
+    """Threads (mesh, rules) through model code; `constrain` is the only
+    integration point layers need."""
+
+    def __init__(self, mesh: Mesh, rules: Dict[str, AxisVal]):
+        self.mesh = mesh
+        self.rules = rules
+
+    def spec(self, axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        """PartitionSpec for logical `axes` against `shape`, dropping any
+        mesh axis that does not divide its dim or is already used."""
+        used: set = set()
+        parts = []
+        for dim, ax in zip(shape, axes):
+            val = self.rules.get(ax)
+            if val is None:
+                parts.append(None)
+                continue
+            mesh_axes = (val,) if isinstance(val, str) else tuple(val)
+            if any(a in used for a in mesh_axes):
+                parts.append(None)
+                continue
+            extent = int(np.prod([self.mesh.shape[a] for a in mesh_axes]))
+            if extent == 0 or dim % extent != 0:
+                parts.append(None)
+                continue
+            used.update(mesh_axes)
+            parts.append(val if isinstance(val, str) else tuple(val))
+        return P(*parts)
+
+    def sharding(self, axes: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    def constrain(self, x, axes: Sequence[Optional[str]]):
+        if len(axes) != x.ndim:
+            raise ValueError(f"axes {axes} vs shape {x.shape}")
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(axes, x.shape))
+
+
+def tree_axes_to_shardings(ctx: ShardCtx, shape_tree, axes_tree):
+    """NamedSharding pytree for a (ShapeDtypeStruct | array) tree and a
+    parallel logical-axes tree whose leaves are tuples of axis names.  (Tuples
+    are pytree-internal nodes, so this flattens the two trees separately.)"""
+    flat_s, tdef = jax.tree.flatten(shape_tree)
+    flat_a = _flatten_axes(axes_tree, tdef)
+    return jax.tree.unflatten(
+        tdef, [ctx.sharding(a, s.shape) for s, a in zip(flat_s, flat_a)])
+
+
+def _flatten_axes(axes_tree, treedef):
+    leaves = jax.tree.flatten(
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))[0]
+    if len(leaves) != treedef.num_leaves:
+        raise ValueError("axes tree does not match value tree")
+    return leaves

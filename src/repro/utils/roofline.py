@@ -1,0 +1,131 @@
+"""Three-term roofline model for TPU v5e (target hardware; see EXPERIMENTS.md).
+
+    compute term    = FLOPs/device / PEAK_FLOPS
+    memory term     = HBM bytes/device / HBM_BW
+    collective term = link traffic/device / ICI_BW  (DCN hops budgeted
+                      separately at DCN_BW when a "pod" axis is present)
+
+The dominant term is the projected step-time lower bound; the reported
+roofline fraction is MODEL_FLOPS-time / dominant-term-time, i.e. how close
+the compiled program is to the best achievable given its own bottleneck.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# TPU v5e, per chip.
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link (conservative single-link budget)
+DCN_BW = 12.5e9          # bytes/s per host cross-pod (100 Gb/s NIC budget)
+HBM_PER_CHIP = 16e9      # capacity
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    ici_bytes_per_device: float
+    dcn_bytes_per_device: float = 0.0
+    model_flops_per_device: float = 0.0
+    # Analytic minimum HBM traffic for the algorithm (params once, cache
+    # once, activation stream) — the memory-side analogue of MODEL_FLOPS.
+    model_bytes_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.ici_bytes_per_device / ICI_BW \
+            + self.dcn_bytes_per_device / DCN_BW
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO FLOPs — remat/redundancy waste detector."""
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def ideal_s(self) -> float:
+        """Best achievable step time: the algorithm's inherent work at peak
+        (useful FLOPs at peak MXU, or minimal HBM traffic at full bandwidth,
+        whichever binds)."""
+        return max(self.model_flops_per_device / PEAK_FLOPS,
+                   self.model_bytes_per_device / HBM_BW)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_s / bound_s: 1.0 = the compiled program does no work beyond
+        the algorithm's inherent compute/traffic; lower = waste (remat,
+        redundancy, layout copies, collectives) in the dominant term."""
+        if self.bound_s <= 0:
+            return 0.0
+        return min(self.ideal_s / self.bound_s, 1.0)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "ici_bytes_per_device": self.ici_bytes_per_device,
+            "dcn_bytes_per_device": self.dcn_bytes_per_device,
+            "model_flops_per_device": self.model_flops_per_device,
+            "model_bytes_per_device": self.model_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound_s": self.bound_s,
+            "ideal_s": self.ideal_s,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(kind: str, n_active_params: float, tokens: float,
+                extra_attn_flops: float = 0.0) -> float:
+    """Global useful FLOPs: 6*N*D for a train step (fwd+bwd), 2*N*D for
+    forward-only (prefill/decode), plus explicit attention term."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens + extra_attn_flops
+
+
+def attention_flops(kind: str, cfg, seq_len: int, batch: int,
+                    decode: bool = False) -> float:
+    """Softmax-attention FLOPs (QK^T + PV), windowing-aware."""
+    if cfg.num_heads == 0:
+        return 0.0
+    specs = [sl for st in cfg.stages for _ in range(st.repeats)
+             for sl in st.block if sl.kind == "attn"]
+    total = 0.0
+    d = cfg.num_heads * cfg.head_dim
+    for sl in specs:
+        if decode:
+            ctx_len = min(sl.window, seq_len) if sl.window else seq_len
+            per_layer = 4.0 * batch * 1 * ctx_len * d
+        else:
+            if sl.window and sl.window < seq_len:
+                per_layer = 4.0 * batch * seq_len * sl.window * d
+            else:
+                per_layer = 4.0 * batch * seq_len * seq_len * d / 2  # causal
+        total += per_layer
+    mult = 3.0 if kind == "train" else 1.0  # bwd ~ 2x fwd
+    return total * mult

@@ -1,0 +1,139 @@
+"""Distributed execution on an 8-device host-platform mesh (subprocess, so
+the forced device count never leaks into other tests).
+
+Covers: real sharded train steps (loss decreases, params sharded as
+planned), sharded serve step, checkpoint save on one mesh -> restore on a
+DIFFERENT mesh (the elastic-restart path), and dry-run cell lowering at
+test scale.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_runs_and_learns():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import registry, runtime
+        from repro.launch import mesh as mesh_lib
+        from repro.train.trainer import Trainer, TrainerConfig
+
+        cfg = registry.get_smoke_config("granite_moe_1b")
+        mesh = mesh_lib.make_test_mesh((4, 2), ("data", "model"))
+        plan = runtime.plan_for(cfg, "train_4k", "train",
+                                dp_axes=("data",))
+        tr = Trainer(cfg, TrainerConfig(seq_len=64, global_batch=8,
+                                        steps=8, log_every=1), mesh, plan)
+        hist = tr.run()
+        losses = [h["loss"] for h in hist]
+        # params are actually sharded over the mesh
+        emb = tr.state.params["embed"]
+        assert len(emb.sharding.device_set) > 1, emb.sharding
+        print("LOSSES", losses[0], losses[-1])
+        assert losses[-1] < losses[0]
+    """)
+    assert "LOSSES" in out
+
+
+def test_sharded_serve_step_matches_single_device():
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import registry, runtime
+        from repro.launch import mesh as mesh_lib, steps as steps_lib
+        from repro.models import params as P, transformer as T
+
+        cfg = registry.get_smoke_config("chatglm3_6b")
+        mesh = mesh_lib.make_test_mesh((2, 4), ("data", "model"))
+        plan = runtime.plan_for(cfg, "decode_32k", "decode",
+                                dp_axes=("data",))
+        fn, (ap, ac, ab), (p_sh, c_sh, b_sh) = steps_lib.build_serve_step(
+            cfg, mesh, plan, batch=4, max_len=32)
+        prm = P.init_params(cfg, jax.random.PRNGKey(0))
+        caches = T.init_caches(cfg, 4, 32)
+        batch = {"tokens": jnp.ones((4, 1), jnp.int32),
+                 "lengths": jnp.zeros((4,), jnp.int32)}
+        with mesh:
+            tok, logits, caches2 = fn(prm, caches, batch)
+        # single-device reference
+        lg_ref, _ = T.decode_step(prm, cfg, batch["tokens"],
+                                  batch["lengths"],
+                                  T.init_caches(cfg, 4, 32))
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(lg_ref[:, 0]),
+                                   atol=2e-3, rtol=2e-3)
+        print("SERVE OK")
+    """)
+
+
+def test_checkpoint_restore_across_mesh_change(tmp_path):
+    run_py(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import registry, runtime
+        from repro.launch import mesh as mesh_lib, steps as steps_lib
+        from repro.train.trainer import Trainer, TrainerConfig
+
+        cfg = registry.get_smoke_config("mamba2_13b")
+        plan = runtime.plan_for(cfg, "train_4k", "train", dp_axes=("data",))
+
+        mesh1 = mesh_lib.make_test_mesh((4, 2), ("data", "model"))
+        tr1 = Trainer(cfg, TrainerConfig(seq_len=32, global_batch=8, steps=4,
+                                         ckpt_dir=r"{tmp_path}",
+                                         ckpt_every=4, log_every=2),
+                      mesh1, plan)
+        tr1.run()
+
+        # the "post-failure" mesh: half the data axis
+        mesh2 = mesh_lib.make_test_mesh((2, 2), ("data", "model"))
+        tr2 = Trainer(cfg, TrainerConfig(seq_len=32, global_batch=8, steps=2,
+                                         ckpt_dir=r"{tmp_path}",
+                                         log_every=1), mesh2, plan)
+        start = tr2.restore_or_init()
+        assert start == 4, start
+        hist = tr2.run()
+        assert all(np.isfinite(h["loss"]) for h in hist)
+        print("ELASTIC RESTORE OK")
+    """)
+
+
+def test_dryrun_cell_at_test_scale():
+    """lower+compile a production-shaped cell on the 8-device mesh via the
+    same code path dryrun uses (mesh shapes reduced)."""
+    run_py("""
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import registry, runtime
+        from repro.launch import steps as steps_lib
+        from repro.utils import hlo as hlo_lib
+
+        cfg = registry.get_smoke_config("mixtral_8x22b")
+        dev = np.asarray(jax.devices()[:8]).reshape(2, 4)
+        mesh = Mesh(dev, ("data", "model"))
+        plan = runtime.plan_for(cfg, "train_4k", "train", dp_axes=("data",))
+        fn, astate, abatch, _ = steps_lib.build_train_step(
+            cfg, mesh, plan, global_batch=8, seq_len=64)
+        with mesh:
+            lowered = fn.lower(astate, abatch)
+            compiled = lowered.compile()
+        rep = hlo_lib.analyze(compiled.as_text())
+        assert rep.flops > 0 and rep.bytes > 0
+        assert rep.collective_count > 0  # sharded program must communicate
+        print("DRYRUN-8DEV OK", int(rep.collective_count))
+    """)

@@ -1,0 +1,124 @@
+"""HLO analyzer: trip-count multiplication, dot FLOPs, in-place modeling.
+
+These compile tiny single-device programs and check the walker against
+hand-computed truths (the roofline table's integrity rests on this).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils import hlo
+
+
+def _report(fn, *specs):
+    compiled = jax.jit(fn).lower(*specs).compile()
+    return hlo.analyze(compiled.as_text())
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, ()
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((9, 128, 128), jnp.float32)
+    rep = _report(f, x, w)
+    expected = 2 * 64 * 128 * 128 * 9
+    assert rep.flops == pytest.approx(expected, rel=0.05)
+
+
+def test_nested_scan_trip_counts():
+    def f(x, w):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, ()
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, ()
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 4, 64, 64), jnp.float32)
+    rep = _report(f, x, w)
+    expected = 2 * 32 * 64 * 64 * 12  # 3 x 4 nested trips
+    assert rep.flops == pytest.approx(expected, rel=0.05)
+
+
+def test_plain_matmul_flops_and_bytes():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    rep = _report(f, a, b)
+    assert rep.flops == pytest.approx(2 * 256 * 512 * 128, rel=0.02)
+    min_bytes = 4 * (256 * 512 + 512 * 128 + 256 * 128)
+    assert min_bytes * 0.9 <= rep.bytes <= min_bytes * 3
+
+
+def test_inplace_cache_update_not_billed_full_buffer():
+    """A one-token dynamic-update-slice into a DONATED buffer must cost
+    O(token), not O(buffer) — the deferred-commit design depends on this.
+    (Without donation XLA copies the buffer, and the walker correctly bills
+    the copy — checked too.)"""
+    def f(cache, tok):
+        return jax.lax.dynamic_update_slice(cache, tok, (0, 5, 0))
+
+    cache = jax.ShapeDtypeStruct((8, 4096, 64), jnp.float32)
+    tok = jax.ShapeDtypeStruct((8, 1, 64), jnp.float32)
+    buffer_bytes = 8 * 4096 * 64 * 4
+
+    donated = jax.jit(f, donate_argnums=(0,)).lower(cache, tok).compile()
+    rep = hlo.analyze(donated.as_text())
+    assert rep.bytes < buffer_bytes * 0.1, rep.bytes
+
+    copied = jax.jit(f).lower(cache, tok).compile()
+    rep2 = hlo.analyze(copied.as_text())
+    assert rep2.bytes >= buffer_bytes  # the defensive copy is real traffic
+
+
+def test_sliced_scan_buffer_not_billed_per_iteration():
+    """Reading one (1, d) slice per scan step from a stacked (L, d) buffer
+    must bill ~L*d total, not L*(L*d)."""
+    def f(x, big):
+        def body(c, i):
+            sl = jax.lax.dynamic_slice(big, (i, 0), (1, 512))
+            return c + sl[0], ()
+        y, _ = jax.lax.scan(body, x, jnp.arange(64))
+        return y
+
+    x = jax.ShapeDtypeStruct((512,), jnp.float32)
+    big = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+    rep = _report(f, x, big)
+    assert rep.bytes < 64 * 512 * 4 * 8  # generous: ~8x the buffer, not 64x
+
+
+def test_collectives_counted_with_ring_model():
+    import subprocess, sys, os, textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "") + ":src"
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.utils import hlo
+        mesh = Mesh(np.asarray(jax.devices()[:4]).reshape(4), ("d",))
+        sh = NamedSharding(mesh, P("d"))
+        def f(x):
+            return jnp.sum(x) * jnp.ones_like(x)
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        with mesh:
+            c = jax.jit(f, in_shardings=sh, out_shardings=sh).lower(x).compile()
+        rep = hlo.analyze(c.as_text())
+        assert rep.collective_count >= 1, rep.coll_counts
+        assert rep.collective_bytes > 0
+        print("COLL", rep.coll_counts)
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "COLL" in out.stdout

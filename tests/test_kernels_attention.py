@@ -1,0 +1,68 @@
+"""Flash-attention kernel vs. ref.mha: shape/dtype/feature sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+CASES = [
+    # b, hq, hkv, tq, tk, d, causal, window, softcap
+    (2, 4, 2, 128, 128, 64, True, 0, 0.0),
+    (1, 8, 1, 200, 200, 64, True, 0, 0.0),     # GQA kv=1, padding
+    (1, 4, 4, 64, 192, 64, True, 0, 0.0),      # chunked prefill (tq < tk)
+    (1, 4, 2, 1, 256, 64, True, 0, 0.0),       # pure decode (tq = 1)
+    (2, 4, 2, 256, 256, 64, True, 128, 0.0),   # sliding window
+    (1, 2, 2, 128, 128, 64, True, 0, 50.0),    # gemma2-style softcap
+    (1, 2, 2, 96, 96, 32, False, 0, 0.0),      # non-causal (encoder)
+    (1, 2, 1, 256, 256, 128, True, 64, 30.0),  # window + softcap + GQA
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_matches_ref_f32(case):
+    b, hq, hkv, tq, tk, d, causal, window, cap = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = jnp.asarray(rng.normal(size=(b, hq, tq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, tk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, tk, d)), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, causal=causal, window=window, softcap=cap)
+    o2 = ref.mha(q, k, v, causal=causal, window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.bfloat16, 2e-2), (jnp.float32, 2e-5)])
+def test_flash_dtypes(dtype, tol):
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), dtype)
+    o1 = ops.flash_attention(q, k, v)
+    o2 = ref.mha(q, k, v)
+    assert o1.dtype == dtype
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_block_shape_independence():
+    """Output must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    o2 = ops.flash_attention(q, k, v, block_q=64, block_k=256)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_flash_window_equals_full_when_wide():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    o_full = ops.flash_attention(q, k, v, window=0)
+    o_win = ops.flash_attention(q, k, v, window=4096)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_win),
+                               atol=1e-6, rtol=1e-6)

@@ -1,0 +1,92 @@
+"""Unit + property tests for the rack/locality model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import locality as loc
+
+TOPO = loc.Topology(24, 6)
+RACK_OF = jnp.asarray(TOPO.rack_of, jnp.int32)
+
+
+def brute_force_masks(task, rack_of, m):
+    local = np.zeros(m, bool)
+    local[list(task)] = True
+    racks = {rack_of[s] for s in task}
+    rack = np.array([rack_of[i] in racks for i in range(m)]) & ~local
+    return local, rack
+
+
+@given(st.lists(st.integers(0, 23), min_size=3, max_size=3, unique=True))
+@settings(max_examples=50, deadline=None)
+def test_locality_masks_match_bruteforce(task):
+    task = sorted(task)
+    local, rack = loc.locality_masks(jnp.array(task, jnp.int32), RACK_OF)
+    bl, br = brute_force_masks(task, np.asarray(TOPO.rack_of), 24)
+    np.testing.assert_array_equal(np.asarray(local), bl)
+    np.testing.assert_array_equal(np.asarray(rack), br)
+
+
+def test_rate_vector_tiers():
+    task = jnp.array([0, 1, 6], jnp.int32)  # racks 0, 0, 1
+    rates3 = jnp.array([0.5, 0.45, 0.25])
+    rv = np.asarray(loc.rate_vector(task, RACK_OF, rates3))
+    assert rv[0] == rv[1] == rv[6] == pytest.approx(0.5)      # locals
+    assert rv[2] == rv[7] == pytest.approx(0.45)              # racks 0 and 1
+    assert rv[12] == rv[23] == pytest.approx(0.25)            # racks 2, 3
+
+
+def test_class_of():
+    task = jnp.array([0, 1, 2], jnp.int32)
+    assert int(loc.class_of(task, RACK_OF, jnp.int32(0))) == loc.LOCAL
+    assert int(loc.class_of(task, RACK_OF, jnp.int32(5))) == loc.RACK_LOCAL
+    assert int(loc.class_of(task, RACK_OF, jnp.int32(12))) == loc.REMOTE
+
+
+def test_capacity_formula():
+    rates = loc.Rates(0.5, 0.45, 0.25)
+    # Known value from the derivation in locality.py docstring.
+    assert loc.capacity_hot_rack(TOPO, rates, 0.5) == pytest.approx(10.0)
+    # p_hot = 0: everything local -> M * alpha.
+    assert loc.capacity_hot_rack(TOPO, rates, 0.0) == pytest.approx(12.0)
+    # Capacity decreases with hotter traffic.
+    caps = [loc.capacity_hot_rack(TOPO, rates, p) for p in (0.3, 0.5, 0.8, 1.0)]
+    assert all(a >= b for a, b in zip(caps, caps[1:]))
+
+
+def test_rates_validation_and_ht_condition():
+    assert loc.Rates(0.5, 0.45, 0.25).heavy_traffic_optimal  # beta^2 > a*g
+    assert not loc.Rates(0.9, 0.5, 0.4).heavy_traffic_optimal
+    with pytest.raises(ValueError):
+        loc.Rates(0.5, 0.6, 0.25)  # beta > alpha
+
+
+def test_sample_task_types_distinct_sorted_and_hot():
+    traffic = loc.Traffic(lam_total=5.0, p_hot=1.0)
+    types = loc.sample_task_types(jax.random.PRNGKey(0), TOPO, traffic, 256)
+    t = np.asarray(types)
+    assert (t[:, 0] < t[:, 1]).all() and (t[:, 1] < t[:, 2]).all()
+    assert (t < TOPO.servers_per_rack).all()  # hot -> all in rack 0
+    traffic = loc.Traffic(lam_total=5.0, p_hot=0.0)
+    t = np.asarray(loc.sample_task_types(jax.random.PRNGKey(1), TOPO, traffic, 512))
+    assert (t[:, 0] < t[:, 1]).all() and (t[:, 1] < t[:, 2]).all()
+    assert t.max() >= TOPO.servers_per_rack  # uniform spreads beyond rack 0
+
+
+def test_random_argmin_breaks_ties_uniformly():
+    score = jnp.array([1.0, 0.0, 0.0, 5.0])
+    picks = [int(loc.random_argmin(jax.random.PRNGKey(i), score))
+             for i in range(200)]
+    assert set(picks) == {1, 2}
+    frac = picks.count(1) / len(picks)
+    assert 0.3 < frac < 0.7
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        loc.Topology(25, 6)
+    with pytest.raises(ValueError):
+        loc.Topology(4, 2)  # rack smaller than replication factor

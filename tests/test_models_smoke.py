@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+(and for a representative subset one backward) on CPU; asserts shapes and
+finiteness.  Full configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import params as P, transformer as T
+from repro.models.config import param_count
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, t=16):
+    tokens = jax.random.randint(KEY, (b, t), 0, cfg.vocab_size)
+    batch = {"tokens": tokens,
+             "labels": jnp.where(jax.random.bernoulli(KEY, 0.9, (b, t)),
+                                 tokens, -1)}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jax.random.normal(
+            KEY, (b, cfg.num_frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            KEY, (b, cfg.num_audio_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = registry.get_smoke_config(arch)
+    prm = P.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    enc_out = T.encode(prm, cfg, batch["frames"]) if cfg.is_encdec else None
+    logits, _, aux = T.forward(prm, cfg, batch["tokens"],
+                               frontend=batch.get("frontend"),
+                               enc_out=enc_out, remat=False)
+    t_extra = cfg.num_frontend_tokens if cfg.frontend == "vision" else 0
+    assert logits.shape == (2, 16 + t_extra, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ["chatglm3_6b", "granite_moe_1b",
+                                  "mamba2_13b", "whisper_medium",
+                                  "jamba15_large"])
+def test_smoke_train_step(arch):
+    """One loss+grad evaluation: finite loss, finite nonzero grads."""
+    cfg = registry.get_smoke_config(arch)
+    prm = P.init_params(cfg, KEY)
+    batch = _batch(cfg)
+
+    def loss_fn(p):
+        loss, metrics = T.lm_loss(p, cfg, batch, remat=True)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(prm)
+    assert bool(jnp.isfinite(loss)), arch
+    assert float(metrics["ce"]) > 0
+    norms = [float(jnp.linalg.norm(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(n) for n in norms)
+    assert sum(norms) > 0
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_exact_config_matches_assignment(arch):
+    """The full config must carry the exact assigned hyperparameters."""
+    spec = {
+        "chatglm3_6b": (28, 4096, 32, 2, 13696, 65024),
+        "gemma3_1b": (26, 1152, 4, 1, 6912, 262144),
+        "codeqwen15_7b": (32, 4096, 32, 32, 13440, 92416),
+        "gemma2_2b": (26, 2304, 8, 4, 9216, 256000),
+        "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+        "jamba15_large": (72, 8192, 64, 8, 24576, 65536),
+        "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+        "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "granite_moe_1b": (24, 1024, 16, 8, 512, 49155),
+        "mamba2_13b": (48, 2048, 0, 0, 0, 50280),
+    }[arch]
+    cfg = registry.get_config(arch)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec, f"{arch}: {got} != {spec}"
+
+
+def test_param_counts_match_published():
+    expected = {  # billions, tolerance band
+        "chatglm3_6b": (6.0, 6.5), "gemma3_1b": (0.9, 1.1),
+        "codeqwen15_7b": (7.0, 8.5), "gemma2_2b": (2.4, 2.8),
+        "internvl2_2b": (1.7, 2.1), "jamba15_large": (390, 405),
+        "whisper_medium": (0.7, 0.95), "mixtral_8x22b": (135, 145),
+        "granite_moe_1b": (1.2, 1.45), "mamba2_13b": (1.2, 1.45),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = param_count(registry.get_config(arch)) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo}, {hi}]"
+
+
+def test_moe_configs():
+    assert registry.get_config("mixtral_8x22b").moe.num_experts == 8
+    assert registry.get_config("mixtral_8x22b").moe.top_k == 2
+    assert registry.get_config("granite_moe_1b").moe.num_experts == 32
+    assert registry.get_config("granite_moe_1b").moe.top_k == 8
+    assert registry.get_config("jamba15_large").moe.num_experts == 16
+    assert registry.get_config("jamba15_large").moe.top_k == 2
+
+
+def test_jamba_interleave_ratio():
+    cfg = registry.get_config("jamba15_large")
+    kinds = [sl.kind for st in cfg.stages for _ in range(st.repeats)
+             for sl in st.block]
+    assert len(kinds) == 72
+    assert kinds.count("attn") == 9   # 1:7 attention:mamba
+    assert kinds.count("mamba") == 63
+    moes = [sl.moe for st in cfg.stages for _ in range(st.repeats)
+            for sl in st.block]
+    assert sum(moes) == 36            # MoE every other layer
+
+
+def test_smoke_config_param_structure_matches_full():
+    """Reduced configs must preserve the structural pattern (same pytree
+    keys) so smoke tests exercise the same code paths as production."""
+    for arch in registry.ARCH_IDS:
+        full = jax.tree.structure(
+            P.logical_axes(registry.get_config(arch)))
+        smoke = jax.tree.structure(
+            P.logical_axes(registry.get_smoke_config(arch)))
+        assert full == smoke, arch

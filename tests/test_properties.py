@@ -1,0 +1,142 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ClusterSpec, BalancedPandasRouter
+from repro.core import locality as loc
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------- capacity model --
+
+@given(st.integers(2, 6), st.integers(4, 10),
+       st.floats(0.05, 1.0), st.floats(0.3, 0.95))
+@settings(max_examples=60, deadline=None)
+def test_capacity_monotonicity(n_racks, per_rack, p_hot, gamma_frac):
+    """Capacity never increases with hot fraction, never decreases with
+    gamma, and is bounded by the all-local optimum M*alpha."""
+    topo = loc.Topology(n_racks * per_rack, per_rack)
+    alpha = 0.5
+    beta = 0.45
+    gamma = min(gamma_frac * beta, beta - 1e-3)
+    rates = loc.Rates(alpha, beta, gamma)
+    cap = loc.capacity_hot_rack(topo, rates, p_hot)
+    assert 0 < cap <= topo.num_servers * alpha + 1e-6
+    cap_hotter = loc.capacity_hot_rack(topo, rates, min(p_hot + 0.1, 1.0))
+    assert cap_hotter <= cap + 1e-6
+    faster = loc.Rates(alpha, beta, min(gamma * 1.1, beta - 1e-4))
+    assert loc.capacity_hot_rack(topo, faster, p_hot) >= cap - 1e-6
+
+
+# -------------------------------------------------- router scale invariance --
+
+@given(st.floats(0.2, 5.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_numpy_router_scale_invariance(c, seed):
+    """Scaling all estimated rates by c never changes any routing decision
+    (the analytical robustness result; see balanced_pandas.py)."""
+    rng = np.random.default_rng(seed)
+    spec = ClusterSpec(12, 4)
+    r1 = BalancedPandasRouter(spec, [0.5, 0.45, 0.25], seed=seed)
+    r2 = BalancedPandasRouter(spec, [0.5 * c, 0.45 * c, 0.25 * c], seed=seed)
+    for _ in range(25):
+        locs = sorted(rng.choice(12, 3, replace=False).tolist())
+        assert r1.route(locs) == r2.route(locs)
+
+
+# ----------------------------------------------------------- rope isometry --
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64),
+       st.sampled_from([0.5, 1.0]))
+@settings(max_examples=25, deadline=None)
+def test_rope_preserves_norm_and_relativity(seed, offset, fraction):
+    """RoPE is an isometry per position, and q.k depends only on relative
+    position: shifting both positions by the same offset keeps all scores."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 2, 8, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 8, 32))
+    pos = jnp.arange(8, dtype=jnp.int32)[None]
+    for x in (q, k):
+        rx = L.rope(x, pos, 10_000.0, fraction)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(rx), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1), rtol=2e-5)
+    s0 = jnp.einsum("bhqd,bhkd->bhqk", L.rope(q, pos, 1e4, fraction),
+                    L.rope(k, pos, 1e4, fraction))
+    s1 = jnp.einsum("bhqd,bhkd->bhqk",
+                    L.rope(q, pos + offset, 1e4, fraction),
+                    L.rope(k, pos + offset, 1e4, fraction))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               atol=2e-3, rtol=2e-3)
+
+
+# ----------------------------------------------- cache commit equivalences --
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_commit_kv_aligned_equals_scatter(seed, layers):
+    """For slot-uniform positions, the aligned DUS commit and the batched
+    scatter commit must produce identical caches."""
+    key = jax.random.PRNGKey(seed)
+    b, h, s, d, t = 2, 2, 16, 8, 1
+    cache = {
+        "k": jax.random.normal(key, (layers, b, h, s, d)),
+        "v": jax.random.normal(jax.random.fold_in(key, 1),
+                               (layers, b, h, s, d)),
+        "pos": jnp.full((layers, b, s), -1, jnp.int32),
+    }
+    k_new = jax.random.normal(jax.random.fold_in(key, 2), (layers, b, h, t, d))
+    v_new = jax.random.normal(jax.random.fold_in(key, 3), (layers, b, h, t, d))
+    p0 = int(jax.random.randint(jax.random.fold_in(key, 4), (), 0, 40))
+    positions = jnp.full((b, t), p0, jnp.int32)
+    a = L.commit_kv(cache, k_new, v_new, positions, aligned=True)
+    b_ = L.commit_kv(cache, k_new, v_new, positions, aligned=False)
+    for kk in ("k", "v", "pos"):
+        np.testing.assert_allclose(np.asarray(a[kk]), np.asarray(b_[kk]),
+                                   atol=1e-6)
+
+
+# ------------------------------------------------------- mha decode == full --
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([0, 8]))
+@settings(max_examples=15, deadline=None)
+def test_mha_decode_matches_mha_xla(seed, window):
+    """The two-piece (stale cache + self token) decode softmax equals
+    attention over the cache WITH the token written."""
+    key = jax.random.PRNGKey(seed)
+    b, h, s, d = 1, 2, 16, 8
+    cur = 10  # tokens 0..9 in cache, decoding token 10
+    kc = jax.random.normal(key, (b, h, s, d))
+    vc = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, d))
+    kpos = jnp.where(jnp.arange(s) < cur, jnp.arange(s), -1)[None]
+    kn = jax.random.normal(jax.random.fold_in(key, 2), (b, h, 1, d))
+    vn = jax.random.normal(jax.random.fold_in(key, 3), (b, h, 1, d))
+    q = jax.random.normal(jax.random.fold_in(key, 4), (b, h, 1, d))
+    qpos = jnp.full((b, 1), cur, jnp.int32)
+
+    out_two = L.mha_decode(q, kc, vc, kn, vn, qpos, kpos, window=window,
+                           softcap=0.0, scale=d ** -0.5)
+    # reference: write the token, then plain masked attention
+    kc2 = kc.at[:, :, cur].set(kn[:, :, 0])
+    vc2 = vc.at[:, :, cur].set(vn[:, :, 0])
+    kpos2 = kpos.at[:, cur].set(cur)
+    out_full = L.mha_xla(q, kc2, vc2, qpos, kpos2, causal=True,
+                         window=window, softcap=0.0, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out_two), np.asarray(out_full),
+                               atol=1e-5, rtol=1e-5)
+
+
+# -------------------------------------------------------- pipeline tokens ---
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_chunk_tokens_deterministic_and_in_vocab(chunk_id):
+    from repro.data.pipeline import PipelineConfig, chunk_tokens
+    cfg = PipelineConfig(tokens_per_chunk=256, vocab_size=1000)
+    a = chunk_tokens(cfg, chunk_id)
+    b = chunk_tokens(cfg, chunk_id)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 1000

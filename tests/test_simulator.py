@@ -1,0 +1,73 @@
+"""Simulator-level behaviour: stability, determinism, FIFO saturation."""
+
+import numpy as np
+import pytest
+
+from repro.core import locality as loc, simulator as sim
+
+CFG = sim.SimConfig(topo=loc.Topology(12, 4), true_rates=loc.Rates(),
+                    p_hot=0.5, max_arrivals=16, horizon=4000, warmup=1000)
+CAP = loc.capacity_hot_rack(CFG.topo, CFG.true_rates, CFG.p_hot)
+EXACT = sim.make_estimates(CFG, "network", 0.0, -1)
+
+
+def test_capacity_small_topo():
+    # M=12, M_R=4: (12-4+4*2)/(0.5/0.5+0.5/0.25)/... see locality.py
+    assert CAP == pytest.approx((12 - 4 + 4 * 2) / (1 + 2))
+
+
+@pytest.mark.parametrize("algo", ["balanced_pandas", "jsq_maxweight",
+                                  "priority"])
+def test_stable_at_moderate_load(algo):
+    out = sim.simulate(algo, CFG, 0.7 * CAP, EXACT, seed=0)
+    # throughput tracks arrivals; system does not diverge
+    assert out["throughput"] == pytest.approx(0.7 * CAP, rel=0.1)
+    assert out["final_n"] < 200
+    # completion time is at least one service time (1/alpha slots)
+    assert out["mean_delay"] >= 1.0 / CFG.true_rates.alpha
+
+
+def test_fifo_saturates_inside_capacity_region():
+    """FIFO is not throughput optimal on the rack model (paper §1): at a
+    load the other algorithms sustain, its queue keeps growing."""
+    out = sim.simulate("fifo", CFG, 0.85 * CAP, EXACT, seed=0)
+    good = sim.simulate("balanced_pandas", CFG, 0.85 * CAP, EXACT, seed=0)
+    assert out["final_n"] > 5 * good["final_n"]
+
+
+def test_deterministic_given_seed():
+    a = sim.simulate("balanced_pandas", CFG, 0.8 * CAP, EXACT, seed=3)
+    b = sim.simulate("balanced_pandas", CFG, 0.8 * CAP, EXACT, seed=3)
+    assert a == b
+    c = sim.simulate("balanced_pandas", CFG, 0.8 * CAP, EXACT, seed=4)
+    assert a["mean_n"] != c["mean_n"]
+
+
+def test_pandas_beats_jsq_mw_in_heavy_traffic():
+    """Paper Fig. 2: heavy-traffic delay advantage of Balanced-PANDAS."""
+    hi = 0.95 * CAP
+    d_bp = np.mean([sim.simulate("balanced_pandas", CFG, hi, EXACT, s)
+                    ["mean_delay"] for s in range(3)])
+    d_mw = np.mean([sim.simulate("jsq_maxweight", CFG, hi, EXACT, s)
+                    ["mean_delay"] for s in range(3)])
+    assert d_bp < d_mw
+
+
+def test_sweep_shapes():
+    lam = np.array([0.6, 0.8], np.float32) * CAP
+    ests = np.stack([EXACT, sim.make_estimates(CFG, "per_server", 0.3, 1)])
+    out = sim.sweep("balanced_pandas", CFG, lam, ests, np.arange(2))
+    assert out["mean_delay"].shape == (2, 2, 2)
+    assert np.isfinite(out["mean_delay"]).all()
+
+
+def test_make_estimates_modes():
+    e_net = sim.make_estimates(CFG, "network", 0.2, -1)
+    assert e_net.shape == (12, 3)
+    np.testing.assert_allclose(e_net[:, 0], CFG.true_rates.alpha)
+    np.testing.assert_allclose(e_net[:, 1], CFG.true_rates.beta * 0.8)
+    e_ps = sim.make_estimates(CFG, "per_server", 0.2, 1, seed=1)
+    assert (e_ps >= np.array([[0.5, 0.45, 0.25]])).all()
+    assert (e_ps <= np.array([[0.5, 0.45, 0.25]]) * 1.2 + 1e-6).all()
+    with pytest.raises(ValueError):
+        sim.make_estimates(CFG, "bogus", 0.1, 1)
