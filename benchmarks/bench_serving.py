@@ -19,6 +19,7 @@ import numpy as np
 def bench(fast: bool = True):
     import jax
     from repro.configs import registry
+    from repro.core.policy import available_routers
     from repro.models import params as P
     from repro.serve.engine import EngineConfig, Request, ServingEngine
 
@@ -30,7 +31,8 @@ def bench(fast: bool = True):
                for _ in range(n_req)]
 
     rows = []
-    for scheduler in ("balanced_pandas", "jsq_maxweight", "fifo"):
+    # every registered router rides along automatically (pandas_po2 included)
+    for scheduler in available_routers():
         for setting, kw in (
             ("exact", {}),
             ("wrong_priors", {"rate_local": 0.2, "rate_rack": 0.9,

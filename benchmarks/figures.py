@@ -39,7 +39,7 @@ def fig1_precise(fast: bool = True):
     lam = np.asarray(cfg.loads, np.float32) * cap
     exact = sim.make_estimates(cfg.sim, "network", 0.0, -1)[None]
     rows = []
-    for algo in ("balanced_pandas", "jsq_maxweight", "priority", "fifo"):
+    for algo in rb.RATE_AWARE + rb.RATE_OBLIVIOUS:
         res = sim.sweep(algo, cfg.sim, lam, exact, np.asarray(cfg.seeds))
         d = res["mean_delay"].mean(axis=(1, 2))
         for load, delay in zip(cfg.loads, d):

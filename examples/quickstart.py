@@ -20,7 +20,7 @@ def main() -> None:
     lam = 0.95 * cap
     print(f"== queueing: M={cfg.topo.num_servers}, capacity={cap:.1f} "
           f"tasks/slot, load=0.95 ==")
-    for algo in ("balanced_pandas", "jsq_maxweight"):
+    for algo in ("balanced_pandas", "pandas_po2", "jsq_maxweight"):
         row = [algo]
         for mode, eps, sign in (("network", 0.0, -1),
                                 ("per_server", 0.3, -1),

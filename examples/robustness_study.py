@@ -11,7 +11,12 @@ sweep.
 
 import argparse
 import csv
+import sys
 from pathlib import Path
+
+# `benchmarks` lives at the repo root, which is not on sys.path when this
+# file is run as a script (sys.path[0] is examples/).
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:

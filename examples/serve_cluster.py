@@ -36,7 +36,8 @@ def main() -> None:
     print(f"serving {args.requests} requests x {args.new_tokens} new tokens "
           f"on 4 replicas (2 pods), replica 1 is 5x slow\n")
     results = {}
-    for scheduler in ("balanced_pandas", "jsq_maxweight", "fifo"):
+    for scheduler in ("balanced_pandas", "pandas_po2", "jsq_maxweight",
+                      "fifo"):
         ecfg = EngineConfig(num_replicas=4, replicas_per_pod=2,
                             slots_per_replica=2, max_len=64,
                             prefill_buckets=(16,), scheduler=scheduler)

@@ -1,17 +1,26 @@
 """The paper's primary contribution: locality-aware load-balancing algorithms
-(Balanced-PANDAS, JSQ-MaxWeight, Priority, FIFO), their discrete-time
-queueing simulator, the robustness-under-rate-estimation-error study, and the
-production-facing cluster router used by the serving engine / data pipeline.
+(Balanced-PANDAS, JSQ-MaxWeight, Priority, FIFO, power-of-d Balanced-PANDAS),
+their discrete-time queueing simulator, the robustness-under-rate-estimation-
+error study, and the production-facing cluster routers used by the serving
+engine / data pipeline — all behind the unified SchedulerPolicy API of
+`core/policy.py`: one registry for the JAX slot-policies and the host-side
+routers.
 """
 
 from repro.core.locality import (  # noqa: F401
     LOCAL, RACK_LOCAL, REMOTE, Rates, Topology, Traffic, capacity_hot_rack,
 )
+from repro.core.policy import (  # noqa: F401
+    Claim, Decision, PolicyConfig, Router, SlotPolicy,
+    available_policies, available_routers, get_policy_cls, get_router_cls,
+    make_policy, make_router, register_policy, register_router,
+)
 from repro.core.simulator import (  # noqa: F401
-    ALGORITHMS, SimConfig, default_config, make_estimates, simulate, sweep,
+    SimConfig, default_config, make_estimates, simulate, sweep,
 )
 from repro.core.cluster import (  # noqa: F401
-    ClusterSpec, BalancedPandasRouter, JsqMaxWeightRouter, FifoRouter, ROUTERS,
+    BalancedPandasRouter, ClusterSpec, FifoRouter, JsqMaxWeightRouter,
+    PandasPoDRouter, tier_of,
 )
 from repro.core.estimator import EwmaRateEstimator, ewma_update  # noqa: F401
 from repro.core.robustness import (  # noqa: F401

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import locality as loc
+from repro.core.policy import SlotPolicy, register_policy
 
 
 class PandasState(NamedTuple):
@@ -95,29 +96,20 @@ def route_one(s: PandasState, key: jax.Array, task: jnp.ndarray,
     )
 
 
-def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
-              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
-              rack_of: jnp.ndarray):
-    """One time slot: arrivals -> service completions -> scheduling.
+def serve_and_schedule(s: PandasState, k_serve: jax.Array,
+                       true3: jnp.ndarray):
+    """Service completions (true rates) + idle-server scheduling.
 
-    Returns (state, completions_this_slot).
+    Shared by every PANDAS-queue-structure policy (full-scan and power-of-d
+    routing only differ in the arrival phase).  Returns (state, completions).
     """
-    k_route, k_serve = jax.random.split(key)
-    n_arr = types.shape[0]
-
-    # 1. Sequential routing of the slot's arrivals (workloads update in-slot).
-    def body(i, st):
-        return route_one(st, jax.random.fold_in(k_route, i), types[i],
-                         active[i], est, rack_of)
-    s = jax.lax.fori_loop(0, n_arr, body, s)
-
-    # 2. Service completions at the *true* rates.
+    # Service completions at the *true* rates.
     rate = jnp.where(s.serving > 0, true3[jnp.clip(s.serving - 1, 0, 2)], 0.0)
     done = jax.random.bernoulli(k_serve, rate)
     completions = jnp.sum(done).astype(jnp.int32)
     serving = jnp.where(done, 0, s.serving)
 
-    # 3. Idle servers pick local > rack-local > remote (conflict-free).
+    # Idle servers pick local > rack-local > remote (conflict-free).
     next_cls = jnp.where(s.q_local > 0, loc.LOCAL,
                          jnp.where(s.q_rack > 0, loc.RACK_LOCAL,
                                    jnp.where(s.q_remote > 0, loc.REMOTE, 0)))
@@ -129,3 +121,38 @@ def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
         serving=jnp.where(take, next_cls, serving).astype(jnp.int32),
     )
     return s, completions
+
+
+def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              rack_of: jnp.ndarray):
+    """One time slot: arrivals -> service completions -> scheduling.
+
+    Returns (state, completions_this_slot).
+    """
+    k_route, k_serve = jax.random.split(key)
+    n_arr = types.shape[0]
+
+    # Sequential routing of the slot's arrivals (workloads update in-slot).
+    def body(i, st):
+        return route_one(st, jax.random.fold_in(k_route, i), types[i],
+                         active[i], est, rack_of)
+    s = jax.lax.fori_loop(0, n_arr, body, s)
+
+    return serve_and_schedule(s, k_serve, true3)
+
+
+@register_policy
+class BalancedPandasPolicy(SlotPolicy):
+    """Balanced-PANDAS as a registered `SlotPolicy`."""
+
+    name = "balanced_pandas"
+
+    def init_state(self, topo: loc.Topology, **opts) -> PandasState:
+        return init_state(topo)
+
+    def slot_step(self, s, key, types, active, est, true3, rack_of):
+        return slot_step(s, key, types, active, est, true3, rack_of)
+
+    def num_in_system(self, s: PandasState) -> jnp.ndarray:
+        return num_in_system(s)

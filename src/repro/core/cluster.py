@@ -1,4 +1,4 @@
-"""Production-facing cluster router: the paper's algorithms as an online,
+"""Production-facing cluster routers: the paper's algorithms as an online,
 host-side service (numpy, incremental) for the serving engine and the data
 pipeline.
 
@@ -7,9 +7,12 @@ pipeline stages); "tasks" carry a set of local workers (where their
 prefix-KV / data chunk lives).  Locality tiers: local (on-worker), rack-local
 (same pod, ICI transfer), remote (cross-pod, DCN transfer).
 
-The router mirrors `core/balanced_pandas.py` et al. exactly — unit tests
+Every router subclasses `repro.core.policy.Router` and speaks the uniform
+``route(locals_) -> Decision`` / ``claim(worker) -> Claim | None`` surface,
+so the serving engine and data pipeline drive any of them through one code
+path.  Each mirrors its `core/*.py` JAX policy exactly — unit tests
 cross-check decisions against the JAX implementations — but maintains state
-incrementally so it can sit on the critical path of a serving engine, and it
+incrementally so it can sit on the critical path of a serving engine, and
 sources its rates from `EwmaRateEstimator` (blind mode) or fixed priors.
 """
 
@@ -20,8 +23,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.estimator import EwmaRateEstimator
-from repro.core.locality import LOCAL, RACK_LOCAL, REMOTE
+from repro.core.policy import Claim, Decision, Router, register_router
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,26 +38,16 @@ class ClusterSpec:
         return np.arange(self.num_workers) // self.workers_per_pod
 
 
-class BalancedPandasRouter:
+@register_router
+class BalancedPandasRouter(Router):
     """Incremental Balanced-PANDAS over an abstract worker fleet."""
 
     name = "balanced_pandas"
 
     def __init__(self, spec: ClusterSpec, rates: Sequence[float],
-                 estimator: Optional[EwmaRateEstimator] = None,
-                 seed: int = 0):
-        self.spec = spec
-        self.pod_of = spec.pod_of
-        self.prior = np.asarray(rates, np.float32)  # (3,) alpha,beta,gamma
-        self.estimator = estimator
+                 estimator=None, seed: int = 0):
+        super().__init__(spec, rates, estimator=estimator, seed=seed)
         self.q = np.zeros((spec.num_workers, 3), np.int64)  # per-tier queues
-        self.rng = np.random.default_rng(seed)
-
-    # -- estimated rates -----------------------------------------------------
-    def _est(self) -> np.ndarray:  # (M,3)
-        if self.estimator is not None:
-            return self.estimator.rates
-        return np.tile(self.prior, (self.spec.num_workers, 1))
 
     def tiers(self, locals_: Sequence[int]) -> np.ndarray:
         """(M,) tier index (0 local / 1 rack-local / 2 remote) of each worker."""
@@ -70,8 +62,8 @@ class BalancedPandasRouter:
         est = self._est()
         return (self.q / est).sum(axis=1)
 
-    def route(self, locals_: Sequence[int]) -> int:
-        """Assign a task with the given local workers; returns the worker.
+    def route(self, locals_: Sequence[int]) -> Decision:
+        """Assign a task with the given local workers.
 
         Ties (typically W == 0 on an idle fleet, where W/rate cannot
         discriminate) break toward the highest-rate tier: an idle local
@@ -88,86 +80,132 @@ class BalancedPandasRouter:
         cand = mins[rate[mins] >= best_rate * (1 - 1e-9)]
         m_star = int(self.rng.choice(cand))
         self.q[m_star, tier[m_star]] += 1
-        return m_star
+        return Decision(worker=m_star, tier=int(tier[m_star]))
 
-    def next_task_tier(self, worker: int) -> Optional[int]:
-        """Which tier the idle worker serves next (local>rack>remote), or None."""
+    def claim(self, worker: int) -> Optional[Claim]:
+        """Idle worker serves its own queues, local > rack > remote."""
         for t in range(3):
             if self.q[worker, t] > 0:
                 self.q[worker, t] -= 1
-                return t
+                return Claim(source=worker, tier=t)
         return None
 
-    def on_complete(self, worker: int, tier: int, service_time: float) -> None:
-        if self.estimator is not None:
-            self.estimator.observe(worker, tier, service_time)
+    def queue_depths(self) -> np.ndarray:
+        return self.q.sum(axis=1)
 
 
-class JsqMaxWeightRouter:
+@register_router
+class PandasPoDRouter(BalancedPandasRouter):
+    """Power-of-d-choices Balanced-PANDAS: O(d) routing on the host path.
+
+    Instead of scanning all M workers per arrival, compare weighted
+    workloads over {the task's locals} ∪ {d uniform samples} only — the
+    candidate scoring touches O(d) rows of the queue matrix, which is what
+    makes the router viable at very large fleets.  Claiming and estimator
+    plumbing are inherited unchanged from `BalancedPandasRouter`; the JAX
+    counterpart is `core/pandas_po2.py`.
+    """
+
+    name = "pandas_po2"
+
+    def __init__(self, spec: ClusterSpec, rates: Sequence[float],
+                 estimator=None, seed: int = 0, d: int = 2):
+        super().__init__(spec, rates, estimator=estimator, seed=seed)
+        if d < 1:
+            raise ValueError(f"need d >= 1 candidate samples, got {d}")
+        self.d = d
+
+    def route(self, locals_: Sequence[int]) -> Decision:
+        m = self.spec.num_workers
+        locals_ = [int(x) for x in locals_]
+        sampled = self.rng.choice(m, size=min(self.d, m), replace=False)
+        cand = sorted(set(locals_) | {int(x) for x in sampled})
+        local_pods = {int(p) for p in self.pod_of[locals_]}
+        tier = np.array([0 if c in locals_
+                         else (1 if int(self.pod_of[c]) in local_pods else 2)
+                         for c in cand], np.int64)
+        # (C, 3) estimated rates for the candidates only — never the full
+        # (M, 3) matrix, or the O(d) claim would be O(M) in disguise.
+        est = (self.estimator.rates_for(cand) if self.estimator is not None
+               else np.tile(self.prior, (len(cand), 1)))
+        w = (self.q[cand] / est).sum(axis=1)
+        rate = np.take_along_axis(est, tier[:, None], axis=1)[:, 0]
+        score = w / rate
+        mins = np.flatnonzero(score <= score.min() * (1 + 1e-9))
+        best_rate = rate[mins].max()
+        pick = mins[rate[mins] >= best_rate * (1 - 1e-9)]
+        j = int(self.rng.choice(pick))
+        m_star = cand[j]
+        self.q[m_star, tier[j]] += 1
+        return Decision(worker=m_star, tier=int(tier[j]))
+
+
+@register_router
+class JsqMaxWeightRouter(Router):
     """Incremental JSQ-MaxWeight baseline over the same fleet abstraction."""
 
     name = "jsq_maxweight"
 
     def __init__(self, spec: ClusterSpec, rates: Sequence[float],
-                 estimator: Optional[EwmaRateEstimator] = None, seed: int = 0):
-        self.spec = spec
-        self.pod_of = spec.pod_of
-        self.prior = np.asarray(rates, np.float32)
-        self.estimator = estimator
+                 estimator=None, seed: int = 0):
+        super().__init__(spec, rates, estimator=estimator, seed=seed)
         self.q = np.zeros(spec.num_workers, np.int64)
-        self.rng = np.random.default_rng(seed)
 
-    def _est(self) -> np.ndarray:
-        if self.estimator is not None:
-            return self.estimator.rates
-        return np.tile(self.prior, (self.spec.num_workers, 1))
-
-    def route(self, locals_: Sequence[int]) -> int:
+    def route(self, locals_: Sequence[int]) -> Decision:
         locals_ = list(locals_)
         j = _rand_argmin(self.rng, self.q[locals_].astype(np.float64))
-        self.q[locals_[j]] += 1
-        return int(locals_[j])
+        m_star = int(locals_[j])
+        self.q[m_star] += 1
+        return Decision(worker=m_star,
+                        tier=tier_of(self.spec, locals_, m_star))
 
-    def claim(self, worker: int) -> Optional[int]:
-        """Idle worker claims head task of argmax weighted queue; returns the
-        queue (owning worker) claimed from, or None."""
+    def claim(self, worker: int) -> Optional[Claim]:
+        """Idle worker claims the head task of the argmax weighted queue
+        (MaxWeight work stealing); returns the queue (owning worker) claimed
+        from, or None."""
         if not (self.q > 0).any():
             return None
         est = self._est()[worker]  # (3,)
         w = np.where(np.arange(self.spec.num_workers) == worker, est[0],
-                     np.where(self.pod_of == self.pod_of[worker], est[1], est[2]))
+                     np.where(self.pod_of == self.pod_of[worker], est[1],
+                              est[2]))
         score = np.where(self.q > 0, w * self.q, -np.inf)
         n_star = _rand_argmax(self.rng, score)
         self.q[n_star] -= 1
-        return int(n_star)
+        tier = 0 if n_star == worker else (
+            1 if self.pod_of[n_star] == self.pod_of[worker] else 2)
+        return Claim(source=int(n_star), tier=tier)
 
-    def on_complete(self, worker: int, tier: int, service_time: float) -> None:
-        if self.estimator is not None:
-            self.estimator.observe(worker, tier, service_time)
+    def queue_depths(self) -> np.ndarray:
+        return self.q.copy()
 
 
-class FifoRouter:
-    """Global-FIFO baseline (Hadoop default)."""
+@register_router
+class FifoRouter(Router):
+    """Global-FIFO baseline (Hadoop default).
+
+    Stores its estimator like every other router (uniform base
+    constructor): FIFO never *consults* rates, but `on_complete`
+    observations still flow, so a fleet can switch from FIFO to a
+    rate-aware policy without re-warming the estimates.
+    """
 
     name = "fifo"
 
     def __init__(self, spec: ClusterSpec, rates: Sequence[float],
                  estimator=None, seed: int = 0):
-        self.spec = spec
-        self.pod_of = spec.pod_of
+        super().__init__(spec, rates, estimator=estimator, seed=seed)
         self.queue: List[List[int]] = []
 
-    def route(self, locals_: Sequence[int]) -> int:
+    def route(self, locals_: Sequence[int]) -> Decision:
         self.queue.append(list(locals_))
-        return -1  # assignment deferred to claim time
+        return Decision(worker=-1, tier=-1, deferred=True)
 
-    def claim(self, worker: int) -> Optional[List[int]]:
+    def claim(self, worker: int) -> Optional[Claim]:
         if not self.queue:
             return None
-        return self.queue.pop(0)
-
-    def on_complete(self, worker: int, tier: int, service_time: float) -> None:
-        pass
+        self.queue.pop(0)
+        return Claim(source=-1, tier=-1)  # tier depends on the task itself
 
 
 def tier_of(spec: ClusterSpec, locals_: Sequence[int], worker: int) -> int:
@@ -187,10 +225,3 @@ def _rand_argmin(rng, x: np.ndarray) -> int:
 def _rand_argmax(rng, x: np.ndarray) -> int:
     maxs = np.flatnonzero(x == x.max())
     return int(rng.choice(maxs))
-
-
-ROUTERS = {
-    "balanced_pandas": BalancedPandasRouter,
-    "jsq_maxweight": JsqMaxWeightRouter,
-    "fifo": FifoRouter,
-}

@@ -65,8 +65,13 @@ class EwmaRateEstimator:
     @property
     def rates(self) -> np.ndarray:
         """(M, 3) current estimates, prior-blended where under-sampled."""
-        w = np.minimum(self._count / self.min_samples, 1.0)
-        est = 1.0 / np.maximum(self._time, 1e-9)
+        return self.rates_for(slice(None))
+
+    def rates_for(self, servers) -> np.ndarray:
+        """(len(servers), 3) estimates for a subset of servers — O(subset),
+        for candidate-sampling routers that must not touch all M rows."""
+        w = np.minimum(self._count[servers] / self.min_samples, 1.0)
+        est = 1.0 / np.maximum(self._time[servers], 1e-9)
         return (w * est + (1.0 - w) * self.prior[None, :]).astype(np.float32)
 
     @property

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import locality as loc
+from repro.core.policy import SlotPolicy, register_policy
 
 
 class FifoState(NamedTuple):
@@ -90,3 +91,31 @@ def slot_step(s: FifoState, key: jax.Array, types: jnp.ndarray,
         0, serving_rate.shape[0], pop, (head, count, serving_rate))
 
     return FifoState(buf, head, count, serving_rate, drops), completions
+
+
+@register_policy
+class FifoPolicy(SlotPolicy):
+    """Global-FIFO as a registered `SlotPolicy`.
+
+    `cap` (ring-buffer bound, a static shape) is the policy option that used
+    to be special-cased in the simulator; it now travels in a
+    ``PolicyConfig("fifo", {"cap": ...})``, and the drop counter surfaces
+    through `extra_metrics`.
+    """
+
+    name = "fifo"
+
+    def __init__(self, cap: int = 32_768):
+        self.cap = cap
+
+    def init_state(self, topo: loc.Topology, **opts) -> FifoState:
+        return init_state(topo, cap=self.cap)
+
+    def slot_step(self, s, key, types, active, est, true3, rack_of):
+        return slot_step(s, key, types, active, est, true3, rack_of)
+
+    def num_in_system(self, s: FifoState) -> jnp.ndarray:
+        return num_in_system(s)
+
+    def extra_metrics(self, s: FifoState):
+        return {"drops": s.drops.astype(jnp.float32)}

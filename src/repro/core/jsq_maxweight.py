@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import claiming, locality as loc
+from repro.core.policy import SlotPolicy, register_policy
 
 
 class JsqMwState(NamedTuple):
@@ -67,3 +68,19 @@ def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
     q, serving_rate = claiming.claim_loop(q, serving_rate, k_claim,
                                           score_fn, true_rate_fn)
     return JsqMwState(q, serving_rate), completions
+
+
+@register_policy
+class JsqMaxWeightPolicy(SlotPolicy):
+    """JSQ-MaxWeight as a registered `SlotPolicy`."""
+
+    name = "jsq_maxweight"
+
+    def init_state(self, topo: loc.Topology, **opts) -> JsqMwState:
+        return init_state(topo)
+
+    def slot_step(self, s, key, types, active, est, true3, rack_of):
+        return slot_step(s, key, types, active, est, true3, rack_of)
+
+    def num_in_system(self, s: JsqMwState) -> jnp.ndarray:
+        return num_in_system(s)

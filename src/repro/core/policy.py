@@ -1,0 +1,282 @@
+"""Unified SchedulerPolicy API: one registry for the JAX slot-policies and
+the host-side routers.
+
+The paper is a *comparison* of scheduling algorithms, and the affinity-
+scheduling line of work keeps producing new locality-aware variants worth
+slotting into the same harness.  This module is the single seam every
+algorithm lands on:
+
+  * `SlotPolicy` — the discrete-time simulator contract.  A policy owns a
+    fixed-shape JAX state pytree and advances it one slot at a time inside
+    `jax.lax.scan`; the simulator (`core/simulator.py`) never needs to know
+    which algorithm it is running.  Per-policy constructor options (FIFO's
+    buffer `cap`, power-of-d's `d`) travel in a `PolicyConfig`; per-policy
+    outputs (FIFO's drop counter) come back through `extra_metrics`.
+
+  * `Router` — the host-side (numpy, incremental) contract used on the
+    critical path of the serving engine and the data pipeline.  All routers
+    speak the same `route(locals_) -> Decision` / `claim(worker) -> Claim`
+    language, so `serve/engine.py` and `data/pipeline.py` drive any of them
+    through one code path: a `Decision` says where the task went (or that
+    assignment is deferred to claim time), a `Claim` says which queue an
+    idle worker just pulled from.
+
+Both registries are populated by the `@register_policy` / `@register_router`
+decorators at the definition site of each algorithm, so adding a scheduler
+is one module with two decorated classes — it is then instantly available
+to the simulator sweep, the robustness study, the serving engine, the data
+pipeline, and the benchmarks.  `pandas_po2` (power-of-d-choices
+Balanced-PANDAS, `core/pandas_po2.py`) is the proof: it was added through
+the registry alone.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import importlib
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Shared routing dataclasses (host side)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """Outcome of `Router.route`: where an arriving task went.
+
+    worker   -- assigned worker id, or -1 when assignment is deferred
+    tier     -- locality tier (0 local / 1 rack / 2 remote) at the assigned
+                worker, or -1 when deferred / unknown at routing time
+    deferred -- True when the router queues globally and picks the worker
+                only at claim time (e.g. FIFO)
+    """
+
+    worker: int
+    tier: int = -1
+    deferred: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Claim:
+    """Outcome of `Router.claim`: what an idle worker just pulled.
+
+    source -- index of the queue the task came from: a worker id for
+              per-worker-queue routers (the claimer's own queue, or another
+              worker's under MaxWeight work stealing), or -1 for a global
+              queue (FIFO)
+    tier   -- the router's belief of the service tier for this claim, or -1
+              when it cannot know (global queue: depends on the task)
+    """
+
+    source: int
+    tier: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Name + per-policy constructor options, e.g.
+    ``PolicyConfig("fifo", {"cap": 4096})`` or
+    ``PolicyConfig("pandas_po2", {"d": 4})``."""
+
+    name: str
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+PolicyLike = Union[str, PolicyConfig, "SlotPolicy"]
+
+
+# ---------------------------------------------------------------------------
+# SlotPolicy: the JAX discrete-time simulator contract
+# ---------------------------------------------------------------------------
+
+
+class SlotPolicy(abc.ABC):
+    """One scheduling algorithm as seen by the discrete-time simulator.
+
+    Implementations are stateless objects over an immutable options set
+    (constructor kwargs); all mutable simulation state lives in the pytree
+    returned by `init_state` and threaded through `slot_step` by the
+    simulator's `lax.scan`.
+    """
+
+    name: str = ""
+
+    @abc.abstractmethod
+    def init_state(self, topo, **opts):
+        """Fresh fixed-shape state pytree for `topo`."""
+
+    @abc.abstractmethod
+    def slot_step(self, state, key: jax.Array, types: jnp.ndarray,
+                  active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+                  rack_of: jnp.ndarray):
+        """One time slot: arrivals -> completions -> scheduling.
+
+        types/active: the slot's (C_A, 3)/(C_A,) arrival batch; est: (M, 3)
+        *estimated* rates the scheduler decides with; true3: (3,) true rates
+        the service dynamics use.  Returns (state, completions int32).
+        """
+
+    @abc.abstractmethod
+    def num_in_system(self, state) -> jnp.ndarray:
+        """Total tasks present (queued + in service), int32 scalar."""
+
+    def extra_metrics(self, state) -> Dict[str, jnp.ndarray]:
+        """Per-policy end-of-run scalars (e.g. FIFO drop count); keys are
+        merged into the simulator's metrics dict."""
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# Router: the host-side incremental contract
+# ---------------------------------------------------------------------------
+
+
+class Router(abc.ABC):
+    """Incremental host-side scheduler over an abstract worker fleet.
+
+    Uniform constructor: (spec, rates, estimator=None, seed=0).  `rates` is
+    the (3,) prior (alpha, beta, gamma); when an `EwmaRateEstimator` is
+    given its live (M, 3) estimates are used instead (blind mode).  Every
+    router accepts and stores the estimator, even rate-oblivious ones —
+    observations still flow through `on_complete`, so switching a fleet
+    from FIFO to a rate-aware policy needs no re-warming.
+    """
+
+    name: str = ""
+
+    def __init__(self, spec, rates: Sequence[float], estimator=None,
+                 seed: int = 0):
+        self.spec = spec
+        self.pod_of = spec.pod_of
+        self.prior = np.asarray(rates, np.float32)  # (3,) alpha,beta,gamma
+        self.estimator = estimator
+        self.rng = np.random.default_rng(seed)
+
+    # -- estimated rates ----------------------------------------------------
+    def _est(self) -> np.ndarray:
+        """(M, 3) current estimated rates (estimator if present, else prior)."""
+        if self.estimator is not None:
+            return self.estimator.rates
+        return np.tile(self.prior, (self.spec.num_workers, 1))
+
+    # -- the uniform surface ------------------------------------------------
+    @abc.abstractmethod
+    def route(self, locals_: Sequence[int]) -> Decision:
+        """Admit one task whose data lives on `locals_`."""
+
+    @abc.abstractmethod
+    def claim(self, worker: int) -> Optional[Claim]:
+        """Idle `worker` asks for its next task; None when nothing to do."""
+
+    def on_complete(self, worker: int, tier: int, service_time: float) -> None:
+        """Feed one observed (worker, tier, service_time) to the estimator."""
+        if self.estimator is not None:
+            self.estimator.observe(worker, tier, service_time)
+
+    def queue_depths(self) -> np.ndarray:
+        """(M,) tasks queued per worker (0s for global-queue routers)."""
+        return np.zeros(self.spec.num_workers)
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+_POLICIES: Dict[str, Type[SlotPolicy]] = {}
+_ROUTERS: Dict[str, Type[Router]] = {}
+
+# Modules that register the built-in policies/routers as an import side
+# effect.  Loaded lazily on first lookup so `policy.py` itself never imports
+# an algorithm module at import time (no cycles).
+_BUILTIN_MODULES = (
+    "repro.core.balanced_pandas",
+    "repro.core.jsq_maxweight",
+    "repro.core.priority",
+    "repro.core.fifo",
+    "repro.core.pandas_po2",
+    "repro.core.cluster",
+)
+_builtins_loaded = False
+
+
+def _load_builtins() -> None:
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+    # Only mark loaded on full success: a failed import must resurface on
+    # the next lookup, not leave a silently half-populated registry.
+    _builtins_loaded = True
+
+
+def register_policy(cls: Type[SlotPolicy]) -> Type[SlotPolicy]:
+    """Class decorator: add a SlotPolicy to the registry under `cls.name`."""
+    name = getattr(cls, "name", "")
+    if not name:
+        raise ValueError(f"policy class {cls.__name__} has no `name`")
+    if name in _POLICIES:
+        raise ValueError(f"duplicate policy registration: {name!r}")
+    _POLICIES[name] = cls
+    return cls
+
+
+def register_router(cls: Type[Router]) -> Type[Router]:
+    """Class decorator: add a Router to the registry under `cls.name`."""
+    name = getattr(cls, "name", "")
+    if not name:
+        raise ValueError(f"router class {cls.__name__} has no `name`")
+    if name in _ROUTERS:
+        raise ValueError(f"duplicate router registration: {name!r}")
+    _ROUTERS[name] = cls
+    return cls
+
+
+def available_policies() -> Tuple[str, ...]:
+    _load_builtins()
+    return tuple(sorted(_POLICIES))
+
+
+def available_routers() -> Tuple[str, ...]:
+    _load_builtins()
+    return tuple(sorted(_ROUTERS))
+
+
+def get_policy_cls(name: str) -> Type[SlotPolicy]:
+    _load_builtins()
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; "
+                         f"registered: {available_policies()}") from None
+
+
+def get_router_cls(name: str) -> Type[Router]:
+    _load_builtins()
+    try:
+        return _ROUTERS[name]
+    except KeyError:
+        raise ValueError(f"unknown router {name!r}; "
+                         f"registered: {available_routers()}") from None
+
+
+def make_policy(spec: PolicyLike) -> SlotPolicy:
+    """Resolve a policy name / PolicyConfig / instance to an instance."""
+    if isinstance(spec, SlotPolicy):
+        return spec
+    if isinstance(spec, str):
+        spec = PolicyConfig(spec)
+    return get_policy_cls(spec.name)(**dict(spec.options))
+
+
+def make_router(name: str, spec, rates: Sequence[float], estimator=None,
+                seed: int = 0, **options) -> Router:
+    """Instantiate a registered router with the uniform constructor."""
+    return get_router_cls(name)(spec, rates, estimator=estimator, seed=seed,
+                                **options)

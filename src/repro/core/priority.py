@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import claiming, locality as loc
+from repro.core.policy import SlotPolicy, register_policy
 
 
 class PriorityState(NamedTuple):
@@ -65,3 +66,19 @@ def slot_step(s: PriorityState, key: jax.Array, types: jnp.ndarray,
     q, serving_rate = claiming.claim_loop(q, serving_rate, k_claim,
                                           score_fn, true_rate_fn)
     return PriorityState(q, serving_rate), completions
+
+
+@register_policy
+class PriorityPolicy(SlotPolicy):
+    """The Priority algorithm as a registered `SlotPolicy`."""
+
+    name = "priority"
+
+    def init_state(self, topo: loc.Topology, **opts) -> PriorityState:
+        return init_state(topo)
+
+    def slot_step(self, s, key, types, active, est, true3, rack_of):
+        return slot_step(s, key, types, active, est, true3, rack_of)
+
+    def num_in_system(self, s: PriorityState) -> jnp.ndarray:
+        return num_in_system(s)

@@ -1,5 +1,6 @@
-"""Robustness study driver (paper §4): sweeps load x estimation-error for the
-four algorithms and emits the data behind Figures 1-6.
+"""Robustness study driver (paper §4): sweeps load x estimation-error for
+every registered algorithm and emits the data behind Figures 1-6 (plus the
+beyond-paper `pandas_po2` arm; see EXPERIMENTS.md).
 
 Figure map:
   fig1: all four algorithms, exact parameters, load sweep.
@@ -22,7 +23,7 @@ import numpy as np
 from repro.core import locality as loc, simulator as sim
 
 EPS_GRID = (0.05, 0.10, 0.15, 0.20, 0.25, 0.30)
-RATE_AWARE = ("balanced_pandas", "jsq_maxweight")
+RATE_AWARE = ("balanced_pandas", "pandas_po2", "jsq_maxweight")
 RATE_OBLIVIOUS = ("priority", "fifo")
 
 

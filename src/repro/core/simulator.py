@@ -4,6 +4,13 @@ One `jax.lax.scan` over time slots per configuration; `jax.vmap` over the
 sweep grid (load x error x seed).  All state is fixed-shape, so the whole
 robustness study compiles to a single XLA program.
 
+The simulator is algorithm-agnostic: it drives any registered `SlotPolicy`
+(see `core/policy.py`) and accepts a policy name, a `PolicyConfig` carrying
+per-policy options (e.g. ``PolicyConfig("fifo", {"cap": 4096})``,
+``PolicyConfig("pandas_po2", {"d": 4})``), or a policy instance.  Per-policy
+metrics (FIFO's drop counter) are merged into the output via
+`SlotPolicy.extra_metrics`.
+
 Mean task completion time is measured via Little's law:
 ``W = mean(N_in_system over measurement window) / lambda_total`` (slots),
 exact for stationary ergodic systems.  Divergence (instability / outside the
@@ -31,15 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import balanced_pandas, fifo, jsq_maxweight, priority
 from repro.core import locality as loc
-
-ALGORITHMS = {
-    "balanced_pandas": balanced_pandas,
-    "jsq_maxweight": jsq_maxweight,
-    "priority": priority,
-    "fifo": fifo,
-}
+from repro.core.policy import PolicyLike, make_policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +50,6 @@ class SimConfig:
     max_arrivals: int = 24
     horizon: int = 40_000
     warmup: int = 10_000
-    fifo_cap: int = 32_768
 
 
 def default_config(**kw) -> SimConfig:
@@ -79,17 +78,13 @@ def make_estimates(cfg: SimConfig, mode: str, eps: float, sign: int,
     return np.clip(est, 1e-3, 1.0)
 
 
-def _build_run(algo_name: str, cfg: SimConfig):
+def _build_run(policy_like: PolicyLike, cfg: SimConfig):
     """Returns jit-able run(lam_total, est(M,3), seed) -> metrics dict."""
-    algo = ALGORITHMS[algo_name]
+    policy = make_policy(policy_like)
     topo, true_rates = cfg.topo, cfg.true_rates
     rack_of = jnp.asarray(topo.rack_of, jnp.int32)
     true3 = true_rates.as_array()
-
-    if algo_name == "fifo":
-        init = functools.partial(algo.init_state, topo, cap=cfg.fifo_cap)
-    else:
-        init = functools.partial(algo.init_state, topo)
+    init = functools.partial(policy.init_state, topo)
 
     def run(lam_total, est, seed):
         base = jax.random.PRNGKey(seed)
@@ -101,13 +96,11 @@ def _build_run(algo_name: str, cfg: SimConfig):
             key_t = jax.random.fold_in(base, t)
             k_arr, k_algo = jax.random.split(key_t)
             # Arrival stream depends only on (seed, t): identical across
-            # algorithms -> paired comparisons (common random numbers).
-            types, active = _sample_arrivals(k_arr, topo, lam_total,
-                                             traffic.p_hot,
-                                             traffic.max_arrivals)
-            state, compl = algo.slot_step(state, k_algo, types, active,
-                                          est, true3, rack_of)
-            n = algo.num_in_system(state).astype(jnp.float32)
+            # policies -> paired comparisons (common random numbers).
+            types, active = loc.sample_arrivals(k_arr, topo, traffic)
+            state, compl = policy.slot_step(state, k_algo, types, active,
+                                            est, true3, rack_of)
+            n = policy.num_in_system(state).astype(jnp.float32)
             in_window = (t >= cfg.warmup).astype(jnp.float32)
             n_meas = n_meas + in_window
             mean_n = mean_n + in_window * (n - mean_n) / jnp.maximum(n_meas, 1.0)
@@ -121,41 +114,30 @@ def _build_run(algo_name: str, cfg: SimConfig):
             "mean_n": mean_n,
             "mean_delay": mean_n / lam_total,
             "throughput": completions / jnp.maximum(n_meas, 1.0),
-            "final_n": algo.num_in_system(state).astype(jnp.float32),
+            "final_n": policy.num_in_system(state).astype(jnp.float32),
         }
-        if algo_name == "fifo":
-            out["drops"] = state.drops.astype(jnp.float32)
+        out.update(policy.extra_metrics(state))
         return out
 
     return run
 
 
-def _sample_arrivals(key, topo, lam_total, p_hot, max_arrivals):
-    traffic = loc.Traffic(lam_total=1.0, p_hot=p_hot,
-                          max_arrivals=max_arrivals)  # lam passed dynamically
-    k_n, k_t = jax.random.split(key)
-    n = jnp.minimum(jax.random.poisson(k_n, lam_total), max_arrivals)
-    active = jnp.arange(max_arrivals) < n
-    types = loc.sample_task_types(k_t, topo, traffic, max_arrivals)
-    return types, active
-
-
-def simulate(algo_name: str, cfg: SimConfig, lam_total: float,
+def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
              est: np.ndarray, seed: int = 0) -> Dict[str, Any]:
     """Single-configuration run (jit-compiled)."""
-    run = jax.jit(_build_run(algo_name, cfg))
+    run = jax.jit(_build_run(policy, cfg))
     out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
               jnp.asarray(seed, jnp.uint32))
     return {k: float(v) for k, v in out.items()}
 
 
-def sweep(algo_name: str, cfg: SimConfig, lam_grid: np.ndarray,
+def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
           est_stack: np.ndarray, seeds: np.ndarray) -> Dict[str, np.ndarray]:
     """Full cartesian sweep, vmapped: results have shape (L, E, S).
 
     lam_grid: (L,) loads; est_stack: (E, M, 3); seeds: (S,).
     """
-    run = _build_run(algo_name, cfg)
+    run = _build_run(policy, cfg)
     f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),
                  (0, None, None))
     f = jax.jit(f)

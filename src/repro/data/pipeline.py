@@ -5,11 +5,13 @@ distributed training: the corpus is split into chunks, every chunk is
 replicated on 3 data hosts (rendezvous hashing), and each read is a "map
 task" whose service rate depends on where it runs — on a replica host
 (local), on a host in the same pod (rack-local: ICI/within-cell network), or
-across pods (remote: DCN).  The chunk->host assignment runs the paper's
-algorithms (Balanced-PANDAS default, JSQ-MW / FIFO selectable), with host
-read rates estimated online (EWMA), so a straggling host automatically
-sheds load — the robustness property the paper establishes is exactly what
-makes the blind version deployable.
+across pods (remote: DCN).  The chunk->host assignment runs any router
+registered in `core/policy.py` (Balanced-PANDAS default; JSQ-MW, FIFO,
+power-of-d PANDAS selectable by name), all driven through the uniform
+`route -> Decision` / `claim -> Claim` surface, with host read rates
+estimated online (EWMA), so a straggling host automatically sheds load —
+the robustness property the paper establishes is exactly what makes the
+blind version deployable.
 
 Tokens are synthesized deterministically from (seed, chunk_id), so any two
 runs — and any resharding of hosts — produce identical global batches
@@ -26,8 +28,9 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cluster import ClusterSpec, ROUTERS, tier_of
+from repro.core.cluster import ClusterSpec, tier_of
 from repro.core.estimator import EwmaRateEstimator
+from repro.core.policy import make_router
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,9 +88,8 @@ class DataPipeline:
         prior = np.array([cfg.rate_local, cfg.rate_rack, cfg.rate_remote],
                          np.float32)
         self.estimator = EwmaRateEstimator(cfg.num_hosts, prior)
-        router_cls = ROUTERS[cfg.scheduler]
-        self.router = router_cls(self.spec, prior, estimator=self.estimator,
-                                 seed=cfg.seed)
+        self.router = make_router(cfg.scheduler, self.spec, prior,
+                                  estimator=self.estimator, seed=cfg.seed)
         self.slow = slow_hosts or {}
         self.rng = np.random.default_rng(cfg.seed + 1)
         self._clock = 0.0
@@ -103,20 +105,19 @@ class DataPipeline:
     def _read_chunk(self, chunk_id: int) -> np.ndarray:
         locs = chunk_replicas(chunk_id, self.cfg.num_hosts,
                               self.cfg.replication, self.cfg.seed)
-        if hasattr(self.router, "tiers"):
-            host = self.router.route(locs)
-        else:  # FIFO defers assignment; emulate an idle-host pop
-            self.router.route(locs)
-            host = int(self.rng.integers(self.cfg.num_hosts))
-            self.router.queue.pop()
+        decision = self.router.route(locs)
+        # Deferred-assignment routers (global queue) pick the host only at
+        # claim time; the synchronous pipeline stands in for "whichever host
+        # goes idle next" with a uniform draw.
+        host = decision.worker if not decision.deferred \
+            else int(self.rng.integers(self.cfg.num_hosts))
         tier = tier_of(self.spec, locs, host)
         rate = [self.cfg.rate_local, self.cfg.rate_rack,
                 self.cfg.rate_remote][tier]
         rate *= self.slow.get(host, 1.0)
         service = float(self.rng.exponential(1.0 / max(rate, 1e-6)))
         self._clock += service
-        if hasattr(self.router, "next_task_tier"):
-            self.router.next_task_tier(host)  # drain the queued task
+        self.router.claim(host)  # drain the queued task (read runs now)
         self.router.on_complete(host, tier, service)
         self.metrics[("local", "rack", "remote")[tier]] += 1
         self.metrics["reads"] += 1

@@ -13,8 +13,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="chatglm3_6b")
     ap.add_argument("--requests", type=int, default=16)
+    from repro.core.policy import available_routers
     ap.add_argument("--scheduler", default="balanced_pandas",
-                    choices=["balanced_pandas", "jsq_maxweight", "fifo"])
+                    choices=list(available_routers()))
     ap.add_argument("--replicas", type=int, default=4)
     args = ap.parse_args()
 

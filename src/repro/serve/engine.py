@@ -14,8 +14,10 @@ Cluster model (the paper's data center, one level up the stack):
 
 The engine actually runs the model: per-replica prefill (bucketed lengths to
 bound recompiles) and batched decode steps over slotted KV caches with
-per-slot lengths.  JSQ-MaxWeight and FIFO are selectable baselines; the
-robustness experiment at the serving level lives in
+per-slot lengths.  Any router registered in `core/policy.py` is selectable
+by name (`EngineConfig.scheduler`) — the engine drives them all through the
+uniform `route -> Decision` / `claim -> Claim` surface, with no per-router
+branching; the robustness experiment at the serving level lives in
 benchmarks/bench_serving.py and examples/serve_cluster.py.
 """
 
@@ -30,8 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cluster import ClusterSpec, ROUTERS, tier_of
+from repro.core.cluster import ClusterSpec, tier_of
 from repro.core.estimator import EwmaRateEstimator
+from repro.core.policy import make_router
 from repro.data.pipeline import chunk_replicas
 from repro.models import params as params_lib, transformer as T
 from repro.models.config import ModelConfig
@@ -149,13 +152,14 @@ class ServingEngine:
         prior = np.array([ecfg.rate_local, ecfg.rate_rack, ecfg.rate_remote],
                          np.float32)
         self.estimator = EwmaRateEstimator(ecfg.num_replicas, prior)
-        self.router = ROUTERS[ecfg.scheduler](
-            self.spec, prior, estimator=self.estimator, seed=ecfg.seed)
+        self.router = make_router(ecfg.scheduler, self.spec, prior,
+                                  estimator=self.estimator, seed=ecfg.seed)
         self.replicas = [Replica(cfg, params, ecfg)
                          for _ in range(ecfg.num_replicas)]
         self.queue: deque = deque()            # not-yet-routed arrivals
         self.waiting: List[deque] = [deque()   # routed, awaiting a slot
                                      for _ in range(ecfg.num_replicas)]
+        self.pending: deque = deque()          # deferred-assignment (global)
         self.slow = slow_replicas or {}
         self.steps = 0
         self.assign_tiers = {0: 0, 1: 0, 2: 0}
@@ -166,40 +170,30 @@ class ServingEngine:
 
     # -- scheduling ----------------------------------------------------------
     def _route_arrivals(self) -> None:
-        fifo = isinstance(self.router, ROUTERS["fifo"])
         while self.queue:
             req = self.queue.popleft()
             locs = chunk_replicas(req.prefix_id, self.ecfg.num_replicas, 3,
                                   self.ecfg.seed)
             req._locs = locs  # type: ignore[attr-defined]
-            if fifo:
-                self.router.route(locs)
-                self.waiting[0].append(req)  # single global queue
+            decision = self.router.route(locs)
+            if decision.deferred:
+                self.pending.append(req)  # assigned at claim time
             else:
-                replica = self.router.route(locs)
-                req.replica = replica
-                self.waiting[replica].append(req)
+                req.replica = decision.worker
+                self.waiting[decision.worker].append(req)
 
     def _admit(self) -> None:
-        fifo = isinstance(self.router, ROUTERS["fifo"])
         for i, rep in enumerate(self.replicas):
             while rep.free_slots():
-                if fifo:
-                    if not self.waiting[0]:
-                        return
-                    self.router.claim(i)
-                    req = self.waiting[0].popleft()
-                    req.replica = i
-                elif self.waiting[i]:
-                    # drain this replica's routed queue (the router tracks
-                    # per-tier backlogs; pop in priority order)
-                    if hasattr(self.router, "next_task_tier"):
-                        self.router.next_task_tier(i)
-                    elif hasattr(self.router, "q"):
-                        self.router.q[i] -= 1
-                    req = self.waiting[i].popleft()
-                else:
+                claim = self.router.claim(i)
+                if claim is None:
                     break
+                # claim.source names the queue the task came from: a
+                # replica's routed queue, or the global deferred queue (-1).
+                src = self.pending if claim.source < 0 \
+                    else self.waiting[claim.source]
+                req = src.popleft()
+                req.replica = i
                 req.tier = tier_of(self.spec, req._locs, req.replica)
                 self.assign_tiers[req.tier] += 1
                 t0 = time.monotonic()
@@ -232,7 +226,4 @@ class ServingEngine:
 
     @property
     def queue_depths(self) -> np.ndarray:
-        if hasattr(self.router, "q"):
-            q = np.asarray(self.router.q)
-            return q.sum(axis=-1) if q.ndim > 1 else q
-        return np.zeros(self.ecfg.num_replicas)
+        return self.router.queue_depths()

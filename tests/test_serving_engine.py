@@ -62,8 +62,8 @@ def test_engine_continuous_batching_oversubscribed():
     assert len({r.replica for r in out}) == ECFG.num_replicas
 
 
-@pytest.mark.parametrize("scheduler", ["balanced_pandas", "jsq_maxweight",
-                                       "fifo"])
+@pytest.mark.parametrize("scheduler", ["balanced_pandas", "pandas_po2",
+                                       "jsq_maxweight", "fifo"])
 def test_all_schedulers_drain(scheduler):
     rng = np.random.default_rng(3)
     ecfg = EngineConfig(num_replicas=2, replicas_per_pod=2,

@@ -103,7 +103,7 @@ def test_router_prefers_idle_local_then_balances():
     spec = ClusterSpec(8, 4)
     r = BalancedPandasRouter(spec, [1.0, 0.8, 0.4], seed=0)
     locs = [0, 1, 2]
-    first = r.route(locs)
+    first = r.route(locs).worker
     assert first in locs  # idle fleet -> local
     # saturate the locals; next assignment must leave the local set
     for _ in range(40):
