@@ -9,6 +9,12 @@ Three fleets are compared under each scheduler:
 Reported: engine steps to drain a fixed request set (lower = better) and the
 locality mix.  Balanced-PANDAS should degrade the least from `exact` to the
 perturbed settings — the paper's conclusion, live on real model execution.
+
+`bench_scenarios` adds the time-varying leg: scenario playback
+(`repro.workloads`) drives BOTH request arrival times (the scenario's
+lam_mult track, via `workloads.arrival_steps`) and replica slowdowns (the
+engine's own playback), so a flash crowd arrives mid-straggler-window on
+real model execution.
 """
 
 from __future__ import annotations
@@ -50,6 +56,52 @@ def bench(fast: bool = True):
                     for i, p in enumerate(prompts)]
             eng.run_until_drained(reqs, max_steps=600)
             rows.append((f"serve_{scheduler}_{setting}",
+                         float(eng.steps),
+                         f"tiers={eng.assign_tiers}"))
+    return rows
+
+
+def bench_scenarios(fast: bool = True):
+    """Scenario playback on the live engine: timed arrivals + slowdowns."""
+    import jax
+    from repro.configs import registry
+    from repro.models import params as P
+    from repro.serve.engine import EngineConfig, Request, ServingEngine
+    from repro.workloads import arrival_steps
+
+    cfg = registry.get_smoke_config("chatglm3_6b")
+    prm = P.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 16 if fast else 48
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+               for _ in range(n_req)]
+
+    rows = []
+    for scheduler in ("balanced_pandas", "jsq_maxweight"):
+        for scenario in ("static", "flash_crowd", "stragglers"):
+            ecfg = EngineConfig(num_replicas=4, replicas_per_pod=2,
+                                slots_per_replica=2, max_len=64,
+                                prefill_buckets=(16,), scheduler=scheduler,
+                                scenario=scenario, scenario_horizon=200)
+            eng = ServingEngine(cfg, prm, ecfg)
+            reqs = [Request(rid=i, prompt=p, max_new_tokens=4,
+                            prefix_id=i % 5)
+                    for i, p in enumerate(prompts)]
+            # The scenario's arrival track times the submissions; its fault
+            # track (engine playback) inflates observed service times.
+            when = arrival_steps(eng.playback, len(reqs),
+                                 base_per_step=len(reqs) / 60.0)
+            nxt = 0
+            while any(r.finish_time == 0.0 for r in reqs):
+                while nxt < len(reqs) and when[nxt] <= eng.steps:
+                    eng.submit(reqs[nxt])
+                    nxt += 1
+                eng.step()
+                if eng.steps > 800:
+                    raise RuntimeError(
+                        f"scenario bench did not drain ({scheduler}, "
+                        f"{scenario})")
+            rows.append((f"serve_{scheduler}_scn_{scenario}",
                          float(eng.steps),
                          f"tiers={eng.assign_tiers}"))
     return rows

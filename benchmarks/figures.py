@@ -10,6 +10,9 @@ fig3  delay under parameters LOWER than real (eps in 5..30%)
 fig4  sensitivity (relative delay change) for fig3
 fig5  delay under parameters HIGHER than real
 fig6  sensitivity for fig5
+drift (beyond-paper) fixed-prior vs blind-EWMA Balanced-PANDAS under the
+      registered time-varying scenarios — the experiment the paper
+      motivates ("the change of traffic over time") but never runs
 """
 
 from __future__ import annotations
@@ -109,6 +112,21 @@ def fig56_over(fast: bool = True):
     return _fig_err("fig5_6", +1, fast)
 
 
+def fig_drift(fast: bool = True, scenarios=None):
+    """Drift study rows: mean delay of the fixed-prior vs blind-EWMA arms
+    under each scenario (see `robustness.drift_study`)."""
+    cfg = _study(fast)
+    study = rb.drift_study(cfg, scenarios=scenarios or rb.DRIFT_SCENARIOS)
+    rows = []
+    for scen in study["scenarios"]:
+        for arm in study["arms"]:
+            rows.append({"figure": "drift", "algo": arm, "scenario": scen,
+                         "load": study["load"], "eps": 0.0, "sign": 0,
+                         "mean_delay":
+                             float(study["delay"][scen][arm].mean())})
+    return rows
+
+
 def headline_claims(rows) -> dict:
     """The paper's central claims, checked on the generated data.
 
@@ -150,4 +168,13 @@ def headline_claims(rows) -> dict:
         band = lambda d: (max(d[k] for k in common)
                           - min(d[k] for k in common))
         out[f"{fig}_pandas_narrower_band"] = band(bp) <= band(mw)
+    # (3) drift: under at least one time-varying scenario the blind EWMA
+    #     estimator beats the (initially exact) fixed prior — the scenario
+    #     subsystem's headline experiment.
+    fix = {r["scenario"]: r["mean_delay"] for r in by[("drift", "fixed_prior")]}
+    bl = {r["scenario"]: r["mean_delay"] for r in by[("drift", "blind_ewma")]}
+    moving = sorted((set(fix) & set(bl)) - {"static"})
+    if moving:
+        out["drift_blind_beats_fixed_somewhere"] = any(
+            bl[s] < fix[s] for s in moving)
     return out

@@ -19,8 +19,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale horizons (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,fig34,fig56,kernels,"
-                         "serving,roofline")
+                    help="comma list: fig1,fig2,fig34,fig56,drift,kernels,"
+                         "serving,serving_scenarios,roofline")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -58,8 +58,10 @@ def main() -> None:
     section("fig2", lambda: figures.fig2_highload(fast))
     section("fig34", lambda: figures.fig34_under(fast))
     section("fig56", lambda: figures.fig56_over(fast))
+    section("drift", lambda: figures.fig_drift(fast))
     section("kernels", lambda: bench_kernels.bench(fast))
     section("serving", lambda: bench_serving.bench(fast))
+    section("serving_scenarios", lambda: bench_serving.bench_scenarios(fast))
     section("roofline", lambda: bench_roofline.bench(fast))
 
     if fig_rows:

@@ -22,7 +22,10 @@ from repro.core.cluster import (  # noqa: F401
     BalancedPandasRouter, ClusterSpec, FifoRouter, JsqMaxWeightRouter,
     PandasPoDRouter, tier_of,
 )
-from repro.core.estimator import EwmaRateEstimator, ewma_update  # noqa: F401
+from repro.core.estimator import (  # noqa: F401
+    EwmaRateEstimator, ewma_time_update, ewma_update,
+)
 from repro.core.robustness import (  # noqa: F401
-    StudyConfig, default_study, run_study, sensitivity, summarize,
+    DRIFT_SCENARIOS, StudyConfig, default_study, drift_study, run_study,
+    sensitivity, summarize, summarize_drift,
 )

@@ -34,7 +34,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import locality as loc
+from repro.core import claiming, locality as loc
 from repro.core.policy import SlotPolicy, register_policy
 
 
@@ -96,35 +96,50 @@ def route_one(s: PandasState, key: jax.Array, task: jnp.ndarray,
     )
 
 
-def serve_and_schedule(s: PandasState, k_serve: jax.Array,
-                       true3: jnp.ndarray):
-    """Service completions (true rates) + idle-server scheduling.
+def service_completions(s: PandasState, k_serve: jax.Array,
+                        true_rates: jnp.ndarray):
+    """Bernoulli service completions at the *true* rates.
 
-    Shared by every PANDAS-queue-structure policy (full-scan and power-of-d
-    routing only differ in the arrival phase).  Returns (state, completions).
+    `true_rates` is the shared ``(3,)`` vector or a per-server ``(M, 3)``
+    matrix (scenario fault injection).  Returns (done (M,) bool,
+    completions int32) — the per-server mask is what the blind policy's
+    estimator consumes.
     """
-    # Service completions at the *true* rates.
-    rate = jnp.where(s.serving > 0, true3[jnp.clip(s.serving - 1, 0, 2)], 0.0)
-    done = jax.random.bernoulli(k_serve, rate)
-    completions = jnp.sum(done).astype(jnp.int32)
-    serving = jnp.where(done, 0, s.serving)
+    tm3 = loc.per_server_rates(true_rates, s.serving.shape[0])
+    done = jax.random.bernoulli(k_serve, claiming.tier_rates(s.serving, tm3))
+    return done, jnp.sum(done).astype(jnp.int32)
 
-    # Idle servers pick local > rack-local > remote (conflict-free).
+
+def schedule_idle(s: PandasState, done: jnp.ndarray) -> PandasState:
+    """Idle servers (post-completion) pick local > rack-local > remote
+    (conflict-free)."""
+    serving = jnp.where(done, 0, s.serving)
     next_cls = jnp.where(s.q_local > 0, loc.LOCAL,
                          jnp.where(s.q_rack > 0, loc.RACK_LOCAL,
                                    jnp.where(s.q_remote > 0, loc.REMOTE, 0)))
     take = (serving == 0) & (next_cls > 0)
-    s = PandasState(
+    return PandasState(
         q_local=s.q_local - (take & (next_cls == loc.LOCAL)),
         q_rack=s.q_rack - (take & (next_cls == loc.RACK_LOCAL)),
         q_remote=s.q_remote - (take & (next_cls == loc.REMOTE)),
         serving=jnp.where(take, next_cls, serving).astype(jnp.int32),
     )
-    return s, completions
+
+
+def serve_and_schedule(s: PandasState, k_serve: jax.Array,
+                       true_rates: jnp.ndarray):
+    """Service completions (true rates) + idle-server scheduling.
+
+    Shared by every PANDAS-queue-structure policy (full-scan, power-of-d
+    and blind routing only differ in the arrival phase / rate source).
+    Returns (state, completions).
+    """
+    done, completions = service_completions(s, k_serve, true_rates)
+    return schedule_idle(s, done), completions
 
 
 def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
-              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
               rack_of: jnp.ndarray):
     """One time slot: arrivals -> service completions -> scheduling.
 
@@ -139,7 +154,7 @@ def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
                          active[i], est, rack_of)
     s = jax.lax.fori_loop(0, n_arr, body, s)
 
-    return serve_and_schedule(s, k_serve, true3)
+    return serve_and_schedule(s, k_serve, true_rates)
 
 
 @register_policy
@@ -151,8 +166,8 @@ class BalancedPandasPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> PandasState:
         return init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true3, rack_of):
-        return slot_step(s, key, types, active, est, true3, rack_of)
+    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
+        return slot_step(s, key, types, active, est, true_rates, rack_of)
 
     def num_in_system(self, s: PandasState) -> jnp.ndarray:
         return num_in_system(s)

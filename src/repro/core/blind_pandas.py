@@ -1,0 +1,107 @@
+"""Blind Balanced-PANDAS: online rate learning inside the simulator
+(Blind GB-PANDAS, Yekkehkhany & Nagi 2020 — the paper's "future work" arm).
+
+Identical queueing structure and service dynamics to `balanced_pandas`, but
+the *scheduler's* rates are not an input: the policy starts from a prior,
+observes every completed task's (server, tier, service time) and maintains
+per-(server, tier) EWMA estimates in its own `lax.scan` state — the JAX
+counterpart of the host-side `EwmaRateEstimator` that the serving engine
+and data pipeline already run.  The ``est`` argument of `slot_step` is
+deliberately ignored: a blind scheduler has no oracle.
+
+This is the second arm of the drift study (`robustness.drift_study`): under
+time-varying scenarios (stragglers, rack congestion, hotspot migration) a
+fixed prior — even one exactly right at t=0 — goes stale, while the blind
+EWMA tracks the drift.  The estimate floor keeps routing finite while a
+(server, tier) pair is unobserved; like the host estimator, the service
+TIME is EWMA'd and inverted on read (1/E[T] is the consistent estimator).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import balanced_pandas as bp
+from repro.core import locality as loc
+from repro.core.estimator import ewma_time_update
+from repro.core.policy import SlotPolicy, register_policy
+
+
+class BlindPandasState(NamedTuple):
+    core: bp.PandasState
+    age: jnp.ndarray   # (M,) int32 completed slots of the in-service task
+    tbar: jnp.ndarray  # (M, 3) f32 EWMA'd service time per (server, tier)
+
+
+@register_policy
+class BlindPandasPolicy(SlotPolicy):
+    """Balanced-PANDAS with self-estimated rates as a registered policy.
+
+    Options: ``prior`` — (alpha0, beta0, gamma0) the estimates start from;
+    ``decay`` — EWMA decay per observation; ``floor`` — lower clamp on the
+    read-side rate estimates.  Travel in
+    ``PolicyConfig("blind_pandas", {"prior": (...), ...})``.
+    """
+
+    name = "blind_pandas"
+
+    def __init__(self, prior: Sequence[float] = (0.5, 0.45, 0.25),
+                 decay: float = 0.98, floor: float = 1e-3):
+        prior = tuple(float(p) for p in prior)
+        if len(prior) != 3 or any(not 0.0 < p <= 1.0 for p in prior):
+            raise ValueError(f"prior must be 3 rates in (0, 1], got {prior}")
+        if not 0.0 < decay < 1.0:
+            raise ValueError(f"decay must be in (0, 1), got {decay}")
+        self.prior: Tuple[float, float, float] = prior
+        self.decay = decay
+        self.floor = floor
+
+    def init_state(self, topo: loc.Topology, **opts) -> BlindPandasState:
+        m = topo.num_servers
+        tbar = jnp.tile(1.0 / jnp.asarray(self.prior, jnp.float32), (m, 1))
+        return BlindPandasState(core=bp.init_state(topo),
+                                age=jnp.zeros((m,), jnp.int32), tbar=tbar)
+
+    def estimates(self, s: BlindPandasState) -> jnp.ndarray:
+        """(M, 3) current rate estimates the routing decisions use."""
+        return jnp.clip(1.0 / jnp.maximum(s.tbar, 1e-9), self.floor, 1.0)
+
+    def slot_step(self, s: BlindPandasState, key, types, active, est,
+                  true_rates, rack_of):
+        del est  # blind: the policy trusts only its own observations
+        my_est = self.estimates(s)
+        k_route, k_serve = jax.random.split(key)
+        n_arr = types.shape[0]
+
+        core = s.core
+
+        def body(i, st):
+            return bp.route_one(st, jax.random.fold_in(k_route, i), types[i],
+                                active[i], my_est, rack_of)
+        core = jax.lax.fori_loop(0, n_arr, body, core)
+
+        # Exactly balanced_pandas's service/scheduling dynamics, via the
+        # shared helpers — only the estimator bookkeeping is new.
+        done, completions = bp.service_completions(core, k_serve, true_rates)
+
+        # Observe: a task completing this slot took age+1 slots of service.
+        tier = jnp.clip(core.serving - 1, 0, 2)
+        tbar = ewma_time_update(s.tbar, done, tier,
+                                (s.age + 1).astype(jnp.float32), self.decay)
+
+        new_core = bp.schedule_idle(core, done)
+        # Tasks that survived the slot age one slot; completed / fresh /
+        # idle servers reset to zero.
+        age = jnp.where((core.serving > 0) & ~done, s.age + 1, 0)
+        return BlindPandasState(new_core, age, tbar), completions
+
+    def num_in_system(self, s: BlindPandasState) -> jnp.ndarray:
+        return bp.num_in_system(s.core)
+
+    def extra_metrics(self, s: BlindPandasState):
+        """Mean learned local-tier rate — a cheap observability hook for the
+        drift figures (tracks straggler windows opening and closing)."""
+        return {"est_alpha_mean": jnp.mean(self.estimates(s)[:, 0])}

@@ -19,35 +19,58 @@ from repro.core import locality as loc
 
 def claim_loop(
     q: jnp.ndarray,                 # (M,) int32 waiting tasks per queue
-    serving_rate: jnp.ndarray,      # (M,) f32; 0 == idle
+    serving_tier: jnp.ndarray,      # (M,) int32; 0 == idle, else class 1..3
     key: jax.Array,
     score_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
-    true_rate_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    tier_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
 ):
     """Each idle server m claims argmax_n score_fn(m, q) among nonempty queues.
 
     score_fn(m, q) -> (M,) float scores; entries for empty queues are masked
-    here.  true_rate_fn(m, n) -> scalar true service rate once m starts n's
-    head task.  Returns (q, serving_rate).
+    here.  tier_fn(m, n) -> int32 service class (LOCAL/RACK_LOCAL/REMOTE)
+    once m starts n's head task.  The CLASS is stored, not the numeric
+    rate: the caller re-derives the rate from the current true rates every
+    slot, so scenario fault injection (stragglers, congestion windows)
+    applies to in-flight tasks too — matching the PANDAS-family dynamics.
+    Returns (q, serving_tier).
     """
     m_total = q.shape[0]
     k_perm, k_tie = jax.random.split(key)
     order = jax.random.permutation(k_perm, m_total)
 
     def body(i, carry):
-        q, serving_rate = carry
+        q, serving_tier = carry
         m = order[i]
-        idle = serving_rate[m] == 0.0
+        idle = serving_tier[m] == 0
         score = jnp.where(q > 0, score_fn(m, q), -jnp.inf)
         any_task = jnp.any(q > 0)
         n_star = loc.random_argmax(jax.random.fold_in(k_tie, i), score)
         take = idle & any_task
         q = q.at[n_star].add(-take.astype(jnp.int32))
-        new_rate = jnp.where(take, true_rate_fn(m, n_star), serving_rate[m])
-        serving_rate = serving_rate.at[m].set(new_rate)
-        return q, serving_rate
+        new_tier = jnp.where(take, tier_fn(m, n_star), serving_tier[m])
+        serving_tier = serving_tier.at[m].set(new_tier.astype(jnp.int32))
+        return q, serving_tier
 
-    return jax.lax.fori_loop(0, m_total, body, (q, serving_rate))
+    return jax.lax.fori_loop(0, m_total, body, (q, serving_tier))
+
+
+def pair_tier(m: jnp.ndarray, n: jnp.ndarray,
+              rack_of: jnp.ndarray) -> jnp.ndarray:
+    """(m,n)-relation service class: LOCAL if m == n, RACK_LOCAL if same
+    rack, else REMOTE — the tier analogue of `loc.pair_rate`, shared by the
+    claim-based policies (JSQ-MaxWeight, Priority)."""
+    return jnp.where(m == n, loc.LOCAL,
+                     jnp.where(rack_of[m] == rack_of[n],
+                               loc.RACK_LOCAL, loc.REMOTE))
+
+
+def tier_rates(serving_tier: jnp.ndarray, tm3: jnp.ndarray) -> jnp.ndarray:
+    """(M,) current true service rate per server: row m of tm3 at the
+    in-service class, 0 where idle.  Looked up fresh each slot so the rate
+    tracks the scenario's per-slot true-rate multipliers."""
+    rate = jnp.take_along_axis(
+        tm3, jnp.clip(serving_tier - 1, 0, 2)[:, None], axis=1)[:, 0]
+    return jnp.where(serving_tier > 0, rate, 0.0)
 
 
 def jsq_route_one(q: jnp.ndarray, key: jax.Array, task: jnp.ndarray,

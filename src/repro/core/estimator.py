@@ -34,6 +34,24 @@ def ewma_update(est: jnp.ndarray, server: jnp.ndarray, tier: jnp.ndarray,
     return est.at[server, tier].set(decay * old + (1.0 - decay) * sample)
 
 
+def ewma_time_update(tbar: jnp.ndarray, done: jnp.ndarray, tier: jnp.ndarray,
+                     service_slots: jnp.ndarray,
+                     decay: float = 0.98) -> jnp.ndarray:
+    """Vectorized masked EWMA of the service TIME, one slot for all servers.
+
+    tbar: (M, 3) EWMA'd service time per (server, tier); done: (M,) bool
+    completion mask this slot; tier: (M,) int32 tier served (0/1/2);
+    service_slots: (M,) f32 observed completion times.  Like the host-side
+    `EwmaRateEstimator`, the TIME is averaged and inverted by the consumer
+    (1/E[T] is the consistent rate estimator; E[1/T] is biased upward).
+    Used by the blind `SlotPolicy` (`core/blind_pandas.py`) inside
+    `lax.scan` — fixed shapes, no scatter.
+    """
+    upd = decay * tbar + (1.0 - decay) * service_slots[:, None]
+    mask = done[:, None] & (jnp.arange(3)[None, :] == tier[:, None])
+    return jnp.where(mask, upd, tbar)
+
+
 @dataclasses.dataclass
 class EwmaRateEstimator:
     """Host-side per-(server, tier) EWMA rate estimator with priors.

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import locality as loc
+from repro.core.claiming import tier_rates
 from repro.core.policy import SlotPolicy, register_policy
 
 
@@ -26,7 +27,7 @@ class FifoState(NamedTuple):
     buf: jnp.ndarray           # (cap, 3) int32 ring buffer of task types
     head: jnp.ndarray          # () int32 index of oldest task
     count: jnp.ndarray         # () int32 number queued
-    serving_rate: jnp.ndarray  # (M,) f32; 0 idle
+    serving_tier: jnp.ndarray  # (M,) int32 class in service; 0 idle
     drops: jnp.ndarray         # () int32 arrivals dropped (buffer full)
 
 
@@ -35,22 +36,23 @@ def init_state(topo: loc.Topology, cap: int = 32768) -> FifoState:
         buf=jnp.zeros((cap, 3), jnp.int32),
         head=jnp.zeros((), jnp.int32),
         count=jnp.zeros((), jnp.int32),
-        serving_rate=jnp.zeros((topo.num_servers,), jnp.float32),
+        serving_tier=jnp.zeros((topo.num_servers,), jnp.int32),
         drops=jnp.zeros((), jnp.int32),
     )
 
 
 def num_in_system(s: FifoState) -> jnp.ndarray:
-    return s.count + jnp.sum(s.serving_rate > 0).astype(jnp.int32)
+    return s.count + jnp.sum(s.serving_tier > 0).astype(jnp.int32)
 
 
 def slot_step(s: FifoState, key: jax.Array, types: jnp.ndarray,
-              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
               rack_of: jnp.ndarray):
     del est  # FIFO consults nothing
     cap = s.buf.shape[0]
     k_serve, k_perm = jax.random.split(key)
     n_arr = types.shape[0]
+    tm3 = loc.per_server_rates(true_rates, s.serving_tier.shape[0])
 
     # 1. Push arrivals (drop when full).
     def push(i, st):
@@ -65,32 +67,33 @@ def slot_step(s: FifoState, key: jax.Array, types: jnp.ndarray,
     buf, head, count, drops = jax.lax.fori_loop(
         0, n_arr, push, (s.buf, s.head, s.count, s.drops))
 
-    # 2. Service completions (true rates).
-    done = jax.random.bernoulli(k_serve, s.serving_rate)
+    # 2. Service completions at the CURRENT true rates (class stored, rate
+    #    re-derived each slot -> scenario drift reaches in-flight tasks).
+    done = jax.random.bernoulli(k_serve, tier_rates(s.serving_tier, tm3))
     completions = jnp.sum(done).astype(jnp.int32)
-    serving_rate = jnp.where(done, 0.0, s.serving_rate)
+    serving_tier = jnp.where(done, 0, s.serving_tier)
 
     # 3. Idle servers pop heads in random server order.
-    order = jax.random.permutation(k_perm, serving_rate.shape[0])
+    order = jax.random.permutation(k_perm, serving_tier.shape[0])
 
     def pop(i, st):
-        head, count, serving_rate = st
+        head, count, serving_tier = st
         m = order[i]
-        take = (serving_rate[m] == 0.0) & (count > 0)
+        take = (serving_tier[m] == 0) & (count > 0)
         task = buf[head % cap]
         local, rack = loc.locality_masks(task, rack_of)
-        rate = jnp.where(local[m], true3[0],
-                         jnp.where(rack[m], true3[1], true3[2]))
-        serving_rate = serving_rate.at[m].set(
-            jnp.where(take, rate, serving_rate[m]))
+        tier = jnp.where(local[m], loc.LOCAL,
+                         jnp.where(rack[m], loc.RACK_LOCAL, loc.REMOTE))
+        serving_tier = serving_tier.at[m].set(
+            jnp.where(take, tier, serving_tier[m]).astype(jnp.int32))
         head = (head + take.astype(jnp.int32)) % cap
         count = count - take.astype(jnp.int32)
-        return head, count, serving_rate
+        return head, count, serving_tier
 
-    head, count, serving_rate = jax.lax.fori_loop(
-        0, serving_rate.shape[0], pop, (head, count, serving_rate))
+    head, count, serving_tier = jax.lax.fori_loop(
+        0, serving_tier.shape[0], pop, (head, count, serving_tier))
 
-    return FifoState(buf, head, count, serving_rate, drops), completions
+    return FifoState(buf, head, count, serving_tier, drops), completions
 
 
 @register_policy
@@ -111,8 +114,8 @@ class FifoPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> FifoState:
         return init_state(topo, cap=self.cap)
 
-    def slot_step(self, s, key, types, active, est, true3, rack_of):
-        return slot_step(s, key, types, active, est, true3, rack_of)
+    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
+        return slot_step(s, key, types, active, est, true_rates, rack_of)
 
     def num_in_system(self, s: FifoState) -> jnp.ndarray:
         return num_in_system(s)

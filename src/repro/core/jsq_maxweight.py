@@ -24,25 +24,26 @@ from repro.core.policy import SlotPolicy, register_policy
 
 class JsqMwState(NamedTuple):
     q: jnp.ndarray             # (M,) int32 waiting tasks (local to each server)
-    serving_rate: jnp.ndarray  # (M,) f32 true rate of in-service task; 0 idle
+    serving_tier: jnp.ndarray  # (M,) int32 (m,n)-class in service; 0 idle
 
 
 def init_state(topo: loc.Topology) -> JsqMwState:
     m = topo.num_servers
-    return JsqMwState(jnp.zeros((m,), jnp.int32), jnp.zeros((m,), jnp.float32))
+    return JsqMwState(jnp.zeros((m,), jnp.int32), jnp.zeros((m,), jnp.int32))
 
 
 def num_in_system(s: JsqMwState) -> jnp.ndarray:
-    return jnp.sum(s.q) + jnp.sum(s.serving_rate > 0)
+    return jnp.sum(s.q) + jnp.sum(s.serving_tier > 0)
 
 
 def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
-              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
               rack_of: jnp.ndarray):
     """est: (M, 3) per-server estimated rates; server m weighs queues with its
-    own estimates est[m]."""
+    own estimates est[m].  true_rates: (3,) shared or (M, 3) per-server."""
     k_route, k_serve, k_claim = jax.random.split(key, 3)
     n_arr = types.shape[0]
+    tm3 = loc.per_server_rates(true_rates, s.q.shape[0])
 
     # 1. JSQ routing among each arrival's local servers.
     def body(i, q):
@@ -50,10 +51,12 @@ def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
                                       types[i], active[i])
     q = jax.lax.fori_loop(0, n_arr, body, s.q)
 
-    # 2. Service completions at true rates.
-    done = jax.random.bernoulli(k_serve, s.serving_rate)
+    # 2. Service completions at the CURRENT true rates (re-derived from the
+    #    stored class each slot, so scenario drift reaches in-flight tasks).
+    done = jax.random.bernoulli(
+        k_serve, claiming.tier_rates(s.serving_tier, tm3))
     completions = jnp.sum(done).astype(jnp.int32)
-    serving_rate = jnp.where(done, 0.0, s.serving_rate)
+    serving_tier = jnp.where(done, 0, s.serving_tier)
 
     # 3. MaxWeight claims: weighted queue lengths with *estimated* rates.
     sid = jnp.arange(q.shape[0])
@@ -62,12 +65,12 @@ def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
         w = loc.pair_rate(m, sid, rack_of, est[m])
         return w * qv.astype(jnp.float32)
 
-    def true_rate_fn(m, n):
-        return loc.pair_rate(m, n, rack_of, true3)
+    def tier_fn(m, n):
+        return claiming.pair_tier(m, n, rack_of)
 
-    q, serving_rate = claiming.claim_loop(q, serving_rate, k_claim,
-                                          score_fn, true_rate_fn)
-    return JsqMwState(q, serving_rate), completions
+    q, serving_tier = claiming.claim_loop(q, serving_tier, k_claim,
+                                          score_fn, tier_fn)
+    return JsqMwState(q, serving_tier), completions
 
 
 @register_policy
@@ -79,8 +82,8 @@ class JsqMaxWeightPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> JsqMwState:
         return init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true3, rack_of):
-        return slot_step(s, key, types, active, est, true3, rack_of)
+    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
+        return slot_step(s, key, types, active, est, true_rates, rack_of)
 
     def num_in_system(self, s: JsqMwState) -> jnp.ndarray:
         return num_in_system(s)

@@ -27,6 +27,7 @@ avoiding rack 0 since any of their (random) local servers serves at
 from __future__ import annotations
 
 import dataclasses
+import numbers
 from functools import partial
 
 import jax
@@ -82,12 +83,8 @@ class Rates:
 
     def scaled(self, mult: float) -> "Rates":
         """Mis-estimated rates: all three off by the same multiplier (paper §4)."""
-        return Rates(self.alpha * mult, self.beta * mult, min(self.gamma * mult, 1.0)) \
-            if mult <= 1.0 else Rates(
-                min(self.alpha * mult, 1.0),
-                min(self.beta * mult, 1.0),
-                min(self.gamma * mult, 1.0),
-            )
+        return Rates(min(self.alpha * mult, 1.0), min(self.beta * mult, 1.0),
+                     min(self.gamma * mult, 1.0))
 
     def as_array(self) -> jnp.ndarray:
         return jnp.array([self.alpha, self.beta, self.gamma], dtype=jnp.float32)
@@ -101,6 +98,20 @@ class Traffic:
     lam_total: float  # mean arrivals per slot (all types)
     p_hot: float = 0.5  # fraction of tasks whose locals all live in rack 0
     max_arrivals: int = 24  # C_A bound of the paper's model
+
+    def __post_init__(self):
+        # lam_total (and, under scenario playback, p_hot) may be a traced
+        # JAX value inside jit — validate only host-side numbers.
+        if isinstance(self.p_hot, numbers.Real) and \
+                not 0.0 <= float(self.p_hot) <= 1.0:
+            raise ValueError(f"p_hot must be in [0, 1], got {self.p_hot}")
+        if isinstance(self.max_arrivals, numbers.Integral) and \
+                self.max_arrivals < 1:
+            raise ValueError(
+                f"max_arrivals must be >= 1, got {self.max_arrivals}")
+        if isinstance(self.lam_total, numbers.Real) and \
+                float(self.lam_total) < 0.0:
+            raise ValueError(f"lam_total must be >= 0, got {self.lam_total}")
 
 
 def capacity_hot_rack(topo: Topology, rates: Rates, p_hot: float) -> float:
@@ -160,19 +171,24 @@ def pair_rate(m: jnp.ndarray, n: jnp.ndarray, rack_of: jnp.ndarray,
                      jnp.where(rack_of[m] == rack_of[n], rates3[1], rates3[2]))
 
 
-def sample_task_types(key: jax.Array, topo: Topology, traffic: Traffic,
-                      batch: int) -> jnp.ndarray:
+def sample_task_types_at(key: jax.Array, rack_of: jnp.ndarray, p_hot,
+                         hot_rack, batch: int) -> jnp.ndarray:
     """Sample `batch` task types: (batch, 3) int32, 3 distinct servers each.
 
-    Hot tasks (prob p_hot) draw all replicas from rack 0; the rest uniformly
-    from all servers.  Uses Gumbel top-k for without-replacement sampling.
+    Hot tasks (prob `p_hot`) draw all replicas from rack `hot_rack`; the
+    rest uniformly from all servers.  Uses Gumbel top-k for
+    without-replacement sampling.  `p_hot` and `hot_rack` may be traced
+    per-slot scenario knobs; for p_hot equal to the config constant and
+    hot_rack == 0 the draws are bitwise identical to the static model
+    (common random numbers across scenarios).
     """
-    m, mr = topo.num_servers, topo.servers_per_rack
+    m = rack_of.shape[0]
     k_hot, k_gum = jax.random.split(key)
-    hot = jax.random.bernoulli(k_hot, traffic.p_hot, (batch,))
+    hot = jax.random.bernoulli(k_hot, p_hot, (batch,))
+    in_hot_rack = rack_of == hot_rack  # (m,)
     logits = jnp.where(
         hot[:, None],
-        jnp.where(jnp.arange(m)[None, :] < mr, 0.0, -jnp.inf),
+        jnp.where(in_hot_rack[None, :], 0.0, -jnp.inf),
         jnp.zeros((1, m)),
     )
     gumbel = jax.random.gumbel(k_gum, (batch, m))
@@ -180,15 +196,42 @@ def sample_task_types(key: jax.Array, topo: Topology, traffic: Traffic,
     return jnp.sort(idx, axis=1).astype(jnp.int32)  # canonical m1<m2<m3
 
 
-def sample_arrivals(key: jax.Array, topo: Topology, traffic: Traffic):
-    """One slot of arrivals: (types (C_A,3) int32, active (C_A,) bool)."""
+def sample_task_types(key: jax.Array, topo: Topology, traffic: Traffic,
+                      batch: int) -> jnp.ndarray:
+    """Static-traffic wrapper over `sample_task_types_at` (hot rack 0)."""
+    rack_of = jnp.asarray(topo.rack_of, jnp.int32)
+    return sample_task_types_at(key, rack_of, traffic.p_hot, jnp.int32(0),
+                                batch)
+
+
+def sample_arrivals_at(key: jax.Array, rack_of: jnp.ndarray, lam, p_hot,
+                       hot_rack, max_arrivals: int):
+    """One slot of arrivals under (possibly traced) per-slot scenario knobs:
+    returns (types (C_A,3) int32, active (C_A,) bool)."""
     k_n, k_t = jax.random.split(key)
-    n = jnp.minimum(
-        jax.random.poisson(k_n, traffic.lam_total), traffic.max_arrivals
-    )
-    active = jnp.arange(traffic.max_arrivals) < n
-    types = sample_task_types(k_t, topo, traffic, traffic.max_arrivals)
+    n = jnp.minimum(jax.random.poisson(k_n, lam), max_arrivals)
+    active = jnp.arange(max_arrivals) < n
+    types = sample_task_types_at(k_t, rack_of, p_hot, hot_rack, max_arrivals)
     return types, active
+
+
+def sample_arrivals(key: jax.Array, topo: Topology, traffic: Traffic):
+    """Static-traffic wrapper over `sample_arrivals_at` (hot rack 0)."""
+    rack_of = jnp.asarray(topo.rack_of, jnp.int32)
+    return sample_arrivals_at(key, rack_of, traffic.lam_total, traffic.p_hot,
+                              jnp.int32(0), traffic.max_arrivals)
+
+
+def per_server_rates(rates: jnp.ndarray, num_servers: int) -> jnp.ndarray:
+    """Broadcast true service rates to per-server form: (M, 3).
+
+    Accepts the classic shared ``(3,)`` vector or an ``(M, 3)`` matrix (the
+    scenario subsystem's per-server fault injection).  Policies normalize
+    through this one helper, so the simulator can feed either with zero
+    per-scenario branching.
+    """
+    r = jnp.asarray(rates, jnp.float32).reshape((-1, 3))
+    return jnp.broadcast_to(r, (num_servers, 3))
 
 
 def random_argmin(key: jax.Array, score: jnp.ndarray) -> jnp.ndarray:

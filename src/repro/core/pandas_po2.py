@@ -68,7 +68,7 @@ def route_one_po_d(s: bp.PandasState, key: jax.Array, task: jnp.ndarray,
 
 
 def slot_step(s: bp.PandasState, key: jax.Array, types: jnp.ndarray,
-              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
               rack_of: jnp.ndarray, d: int = 2):
     """One slot: po-d arrival routing, then shared PANDAS service/schedule."""
     k_route, k_serve = jax.random.split(key)
@@ -79,7 +79,7 @@ def slot_step(s: bp.PandasState, key: jax.Array, types: jnp.ndarray,
                               active[i], est, rack_of, d)
     s = jax.lax.fori_loop(0, n_arr, body, s)
 
-    return bp.serve_and_schedule(s, k_serve, true3)
+    return bp.serve_and_schedule(s, k_serve, true_rates)
 
 
 @register_policy
@@ -101,8 +101,9 @@ class PandasPoDPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> bp.PandasState:
         return bp.init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true3, rack_of):
-        return slot_step(s, key, types, active, est, true3, rack_of, d=self.d)
+    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
+        return slot_step(s, key, types, active, est, true_rates, rack_of,
+                         d=self.d)
 
     def num_in_system(self, s: bp.PandasState) -> jnp.ndarray:
         return bp.num_in_system(s)

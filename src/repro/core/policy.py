@@ -113,13 +113,16 @@ class SlotPolicy(abc.ABC):
 
     @abc.abstractmethod
     def slot_step(self, state, key: jax.Array, types: jnp.ndarray,
-                  active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
-                  rack_of: jnp.ndarray):
+                  active: jnp.ndarray, est: jnp.ndarray,
+                  true_rates: jnp.ndarray, rack_of: jnp.ndarray):
         """One time slot: arrivals -> completions -> scheduling.
 
         types/active: the slot's (C_A, 3)/(C_A,) arrival batch; est: (M, 3)
-        *estimated* rates the scheduler decides with; true3: (3,) true rates
-        the service dynamics use.  Returns (state, completions int32).
+        *estimated* rates the scheduler decides with; true_rates: the rates
+        the service dynamics use — the shared (3,) vector, or (M, 3)
+        per-server under scenario fault injection (stragglers, congestion);
+        policies normalize via `locality.per_server_rates`.  Returns
+        (state, completions int32).
         """
 
     @abc.abstractmethod
@@ -200,6 +203,7 @@ _BUILTIN_MODULES = (
     "repro.core.priority",
     "repro.core.fifo",
     "repro.core.pandas_po2",
+    "repro.core.blind_pandas",
     "repro.core.cluster",
 )
 _builtins_loaded = False

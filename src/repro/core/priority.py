@@ -23,34 +23,36 @@ from repro.core.policy import SlotPolicy, register_policy
 
 class PriorityState(NamedTuple):
     q: jnp.ndarray             # (M,) int32
-    serving_rate: jnp.ndarray  # (M,) f32; 0 idle
+    serving_tier: jnp.ndarray  # (M,) int32 (m,n)-class in service; 0 idle
 
 
 def init_state(topo: loc.Topology) -> PriorityState:
     m = topo.num_servers
     return PriorityState(jnp.zeros((m,), jnp.int32),
-                         jnp.zeros((m,), jnp.float32))
+                         jnp.zeros((m,), jnp.int32))
 
 
 def num_in_system(s: PriorityState) -> jnp.ndarray:
-    return jnp.sum(s.q) + jnp.sum(s.serving_rate > 0)
+    return jnp.sum(s.q) + jnp.sum(s.serving_tier > 0)
 
 
 def slot_step(s: PriorityState, key: jax.Array, types: jnp.ndarray,
-              active: jnp.ndarray, est: jnp.ndarray, true3: jnp.ndarray,
+              active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
               rack_of: jnp.ndarray):
     del est  # the Priority algorithm never consults service rates
     k_route, k_serve, k_claim = jax.random.split(key, 3)
     n_arr = types.shape[0]
+    tm3 = loc.per_server_rates(true_rates, s.q.shape[0])
 
     def body(i, q):
         return claiming.jsq_route_one(q, jax.random.fold_in(k_route, i),
                                       types[i], active[i])
     q = jax.lax.fori_loop(0, n_arr, body, s.q)
 
-    done = jax.random.bernoulli(k_serve, s.serving_rate)
+    done = jax.random.bernoulli(
+        k_serve, claiming.tier_rates(s.serving_tier, tm3))
     completions = jnp.sum(done).astype(jnp.int32)
-    serving_rate = jnp.where(done, 0.0, s.serving_rate)
+    serving_tier = jnp.where(done, 0, s.serving_tier)
 
     sid = jnp.arange(q.shape[0])
     big = jnp.float32(1e9)
@@ -60,12 +62,12 @@ def slot_step(s: PriorityState, key: jax.Array, types: jnp.ndarray,
         own = (sid == m) & (qv > 0)
         return jnp.where(own, big, qv.astype(jnp.float32))
 
-    def true_rate_fn(m, n):
-        return loc.pair_rate(m, n, rack_of, true3)
+    def tier_fn(m, n):
+        return claiming.pair_tier(m, n, rack_of)
 
-    q, serving_rate = claiming.claim_loop(q, serving_rate, k_claim,
-                                          score_fn, true_rate_fn)
-    return PriorityState(q, serving_rate), completions
+    q, serving_tier = claiming.claim_loop(q, serving_tier, k_claim,
+                                          score_fn, tier_fn)
+    return PriorityState(q, serving_tier), completions
 
 
 @register_policy
@@ -77,8 +79,8 @@ class PriorityPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> PriorityState:
         return init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true3, rack_of):
-        return slot_step(s, key, types, active, est, true3, rack_of)
+    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
+        return slot_step(s, key, types, active, est, true_rates, rack_of)
 
     def num_in_system(self, s: PriorityState) -> jnp.ndarray:
         return num_in_system(s)

@@ -11,6 +11,16 @@ Figure map:
 
 Priority and FIFO never consult the rate estimates, so their error curves are
 flat by construction; we simulate them once (exact) per load and reuse.
+
+Drift study (`drift_study`, beyond the paper's figures): the paper argues
+Balanced-PANDAS matters because of "the change of traffic over time in
+addition to estimation errors of processing rates" — the scenario subsystem
+(`repro.workloads`) finally runs that experiment.  Two arms per scenario:
+a fixed prior that is exactly right at t=0 but never updated, vs the blind
+EWMA policy (`blind_pandas`) that starts from the same prior and keeps
+learning.  Under time-varying truth (stragglers, rack congestion, hotspot
+migration) the fixed prior goes stale mid-run; the study measures what the
+online estimator buys back.
 """
 
 from __future__ import annotations
@@ -21,10 +31,16 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro.core import locality as loc, simulator as sim
+from repro.core.policy import PolicyConfig, PolicyLike
+from repro.workloads import ScenarioLike
 
 EPS_GRID = (0.05, 0.10, 0.15, 0.20, 0.25, 0.30)
 RATE_AWARE = ("balanced_pandas", "pandas_po2", "jsq_maxweight")
 RATE_OBLIVIOUS = ("priority", "fifo")
+# Scenarios for the drift study: "static" is the control arm where the
+# fixed prior is unbeatable (it is exact and never goes stale).
+DRIFT_SCENARIOS = ("static", "diurnal", "flash_crowd", "mmpp", "hot_shift",
+                   "stragglers", "rack_congestion")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,11 +64,14 @@ def default_study(fast: bool = False) -> StudyConfig:
 
 
 def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
-              signs: Sequence[int] = (-1, 1)) -> Dict:
+              signs: Sequence[int] = (-1, 1),
+              scenario: ScenarioLike = None) -> Dict:
     """Returns nested results:
     delay[algo]: (L, E, S) with E = 1 (exact) + len(eps_grid)*len(signs)
     plus the grids needed to plot.  Error settings only materialize for
     rate-aware algorithms; oblivious ones get the exact column only.
+    `scenario` (name / Scenario; None -> static) applies to every arm — the
+    loads stay expressed as fractions of the STATIC fluid capacity.
     """
     algos = list(algos or (RATE_AWARE + RATE_OBLIVIOUS))
     cap = loc.capacity_hot_rack(cfg.sim.topo, cfg.sim.true_rates, cfg.sim.p_hot)
@@ -73,11 +92,64 @@ def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
                  "delay": {}, "throughput": {}, "final_n": {}}
     for algo in algos:
         stack = est_stack if algo in RATE_AWARE else est_stack[:1]
-        res = sim.sweep(algo, cfg.sim, lam, stack, seeds)
+        res = sim.sweep(algo, cfg.sim, lam, stack, seeds, scenario=scenario)
         out["delay"][algo] = res["mean_delay"]
         out["throughput"][algo] = res["throughput"]
         out["final_n"][algo] = res["final_n"]
     return out
+
+
+def drift_study(cfg: StudyConfig,
+                scenarios: Sequence[str] = DRIFT_SCENARIOS,
+                load: float = 0.75) -> Dict:
+    """Fixed-prior vs blind-EWMA Balanced-PANDAS under each scenario.
+
+    Both arms start from the exact static rates — the *best possible*
+    fixed prior — so any blind win is pure drift-tracking, not prior
+    quality.  Returns delay/throughput/final_n[scenario][arm] arrays of
+    shape (S_seeds,) plus the winner per scenario.
+    """
+    r = cfg.sim.true_rates
+    prior = (r.alpha, r.beta, r.gamma)
+    arms: Dict[str, PolicyLike] = {
+        "fixed_prior": "balanced_pandas",
+        "blind_ewma": PolicyConfig("blind_pandas", {"prior": prior}),
+    }
+    cap = loc.capacity_hot_rack(cfg.sim.topo, r, cfg.sim.p_hot)
+    lam = np.asarray([load], np.float32) * cap
+    seeds = np.asarray(cfg.seeds)
+    est_exact = sim.make_estimates(cfg.sim, "network", 0.0, -1)[None]
+
+    out: Dict = {"capacity": cap, "load": load, "arms": tuple(arms),
+                 "scenarios": tuple(scenarios), "delay": {},
+                 "throughput": {}, "final_n": {}}
+    for scen in scenarios:
+        for name in ("delay", "throughput", "final_n"):
+            out[name][scen] = {}
+        for arm, policy in arms.items():
+            res = sim.sweep(policy, cfg.sim, lam, est_exact, seeds,
+                            scenario=scen)
+            out["delay"][scen][arm] = res["mean_delay"][0, 0]
+            out["throughput"][scen][arm] = res["throughput"][0, 0]
+            out["final_n"][scen][arm] = res["final_n"][0, 0]
+    out["blind_wins"] = {
+        scen: float(out["delay"][scen]["blind_ewma"].mean())
+        < float(out["delay"][scen]["fixed_prior"].mean())
+        for scen in scenarios}
+    return out
+
+
+def summarize_drift(study: Dict) -> str:
+    """Human-readable drift-study table (one row per scenario)."""
+    lines = [f"{'scenario':16s} {'fixed_prior':>12s} {'blind_ewma':>12s}  "
+             f"winner   (mean delay, slots; load "
+             f"{study['load']:.2f} x static capacity)"]
+    for scen in study["scenarios"]:
+        d_fix = float(study["delay"][scen]["fixed_prior"].mean())
+        d_bl = float(study["delay"][scen]["blind_ewma"].mean())
+        win = "blind" if study["blind_wins"][scen] else "fixed"
+        lines.append(f"{scen:16s} {d_fix:12.2f} {d_bl:12.2f}  {win}")
+    return "\n".join(lines)
 
 
 def sensitivity(delay_les: np.ndarray) -> np.ndarray:

@@ -4,6 +4,15 @@ One `jax.lax.scan` over time slots per configuration; `jax.vmap` over the
 sweep grid (load x error x seed).  All state is fixed-shape, so the whole
 robustness study compiles to a single XLA program.
 
+Scenarios (`repro.workloads`): every run plays back a declarative
+piecewise schedule of workload knobs — arrival-rate multiplier, hot
+fraction, hot rack, per-server/per-tier true-rate multipliers — gathered
+per slot from compiled fixed-shape arrays (`slot_knobs`).  The simulator
+itself contains zero per-scenario branching: the default ``"static"``
+scenario multiplies every knob by 1.0 and reproduces the pre-scenario
+sample paths bitwise (common random numbers preserved across scenarios and
+policies alike).
+
 The simulator is algorithm-agnostic: it drives any registered `SlotPolicy`
 (see `core/policy.py`) and accepts a policy name, a `PolicyConfig` carrying
 per-policy options (e.g. ``PolicyConfig("fifo", {"cap": 4096})``,
@@ -40,6 +49,7 @@ import numpy as np
 
 from repro.core import locality as loc
 from repro.core.policy import PolicyLike, make_policy
+from repro import workloads as wl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +60,18 @@ class SimConfig:
     max_arrivals: int = 24
     horizon: int = 40_000
     warmup: int = 10_000
+
+    def __post_init__(self):
+        # Same guard as loc.Traffic: p_hot feeds bernoulli via the compiled
+        # scenario schedule, and a negative value would flow silently.
+        if not 0.0 <= self.p_hot <= 1.0:
+            raise ValueError(f"p_hot must be in [0, 1], got {self.p_hot}")
+        if self.max_arrivals < 1:
+            raise ValueError(
+                f"max_arrivals must be >= 1, got {self.max_arrivals}")
+        if not 0 <= self.warmup < self.horizon:
+            raise ValueError(f"need 0 <= warmup < horizon, got "
+                             f"warmup={self.warmup} horizon={self.horizon}")
 
 
 def default_config(**kw) -> SimConfig:
@@ -78,28 +100,43 @@ def make_estimates(cfg: SimConfig, mode: str, eps: float, sign: int,
     return np.clip(est, 1e-3, 1.0)
 
 
-def _build_run(policy_like: PolicyLike, cfg: SimConfig):
-    """Returns jit-able run(lam_total, est(M,3), seed) -> metrics dict."""
+def _build_run(policy_like: PolicyLike, cfg: SimConfig,
+               scenario: wl.ScenarioLike = None):
+    """Returns jit-able run(lam_total, est(M,3), seed) -> metrics dict.
+
+    `scenario` (name / ScenarioConfig / Scenario; None -> "static") compiles
+    to fixed-shape per-segment arrays gathered once per slot — the only
+    scenario seam in the simulator, shared by every policy.
+    """
     policy = make_policy(policy_like)
     topo, true_rates = cfg.topo, cfg.true_rates
     rack_of = jnp.asarray(topo.rack_of, jnp.int32)
     true3 = true_rates.as_array()
+    sched = wl.compile_schedule(wl.make_scenario(scenario), topo,
+                                cfg.horizon, cfg.p_hot)
+    # Little's-law denominator: the offered rate over the measurement
+    # window is lam_total x the window's mean arrival multiplier (exactly
+    # 1.0 for the static scenario and any unit-mean modulation).
+    lam_scale = wl.mean_lam_mult_over(sched, cfg.warmup, cfg.horizon)
     init = functools.partial(policy.init_state, topo)
 
     def run(lam_total, est, seed):
         base = jax.random.PRNGKey(seed)
-        traffic = loc.Traffic(lam_total=lam_total, p_hot=cfg.p_hot,
-                              max_arrivals=cfg.max_arrivals)
 
         def step(carry, t):
             state, mean_n, n_meas, completions = carry
+            knobs = wl.slot_knobs(sched, t)
             key_t = jax.random.fold_in(base, t)
             k_arr, k_algo = jax.random.split(key_t)
-            # Arrival stream depends only on (seed, t): identical across
-            # policies -> paired comparisons (common random numbers).
-            types, active = loc.sample_arrivals(k_arr, topo, traffic)
+            # Arrival stream depends only on (seed, t) and the scenario:
+            # identical across policies -> paired comparisons (common
+            # random numbers).
+            types, active = loc.sample_arrivals_at(
+                k_arr, rack_of, lam_total * knobs.lam_mult, knobs.p_hot,
+                knobs.hot_rack, cfg.max_arrivals)
+            true_m3 = true3[None, :] * knobs.rate_mult
             state, compl = policy.slot_step(state, k_algo, types, active,
-                                            est, true3, rack_of)
+                                            est, true_m3, rack_of)
             n = policy.num_in_system(state).astype(jnp.float32)
             in_window = (t >= cfg.warmup).astype(jnp.float32)
             n_meas = n_meas + in_window
@@ -112,7 +149,7 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig):
             step, carry0, jnp.arange(cfg.horizon))
         out = {
             "mean_n": mean_n,
-            "mean_delay": mean_n / lam_total,
+            "mean_delay": mean_n / (lam_total * lam_scale),
             "throughput": completions / jnp.maximum(n_meas, 1.0),
             "final_n": policy.num_in_system(state).astype(jnp.float32),
         }
@@ -123,21 +160,25 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig):
 
 
 def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
-             est: np.ndarray, seed: int = 0) -> Dict[str, Any]:
+             est: np.ndarray, seed: int = 0,
+             scenario: wl.ScenarioLike = None) -> Dict[str, Any]:
     """Single-configuration run (jit-compiled)."""
-    run = jax.jit(_build_run(policy, cfg))
+    run = jax.jit(_build_run(policy, cfg, scenario))
     out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
               jnp.asarray(seed, jnp.uint32))
     return {k: float(v) for k, v in out.items()}
 
 
 def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
-          est_stack: np.ndarray, seeds: np.ndarray) -> Dict[str, np.ndarray]:
+          est_stack: np.ndarray, seeds: np.ndarray,
+          scenario: wl.ScenarioLike = None) -> Dict[str, np.ndarray]:
     """Full cartesian sweep, vmapped: results have shape (L, E, S).
 
-    lam_grid: (L,) loads; est_stack: (E, M, 3); seeds: (S,).
+    lam_grid: (L,) loads; est_stack: (E, M, 3); seeds: (S,).  The scenario
+    schedule is a closure constant — its shapes carry no batch dimension,
+    so the whole grid still compiles to one vmapped XLA program.
     """
-    run = _build_run(policy, cfg)
+    run = _build_run(policy, cfg, scenario)
     f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),
                  (0, None, None))
     f = jax.jit(f)

@@ -11,7 +11,10 @@ power-of-d PANDAS selectable by name), all driven through the uniform
 `route -> Decision` / `claim -> Claim` surface, with host read rates
 estimated online (EWMA), so a straggling host automatically sheds load —
 the robustness property the paper establishes is exactly what makes the
-blind version deployable.
+blind version deployable.  Time-varying faults come from the scenario
+subsystem (`PipelineConfig.scenario`, `repro.workloads`): straggler windows
+and congestion sags play back on the virtual clock, and the estimator
+tracks them while they last.
 
 Tokens are synthesized deterministically from (seed, chunk_id), so any two
 runs — and any resharding of hosts — produce identical global batches
@@ -31,6 +34,7 @@ import numpy as np
 from repro.core.cluster import ClusterSpec, tier_of
 from repro.core.estimator import EwmaRateEstimator
 from repro.core.policy import make_router
+from repro.workloads import ScenarioLike, host_playback, make_scenario
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +53,10 @@ class PipelineConfig:
     rate_local: float = 1.0
     rate_rack: float = 0.8
     rate_remote: float = 0.4
+    # scenario playback (repro.workloads) on the virtual clock: straggler
+    # hosts and congestion windows; None -> "static" (multipliers 1.0)
+    scenario: ScenarioLike = None
+    scenario_horizon: float = 256.0  # virtual-time units per playback cycle
 
 
 def chunk_replicas(chunk_id: int, num_hosts: int, replication: int,
@@ -91,6 +99,11 @@ class DataPipeline:
         self.router = make_router(cfg.scheduler, self.spec, prior,
                                   estimator=self.estimator, seed=cfg.seed)
         self.slow = slow_hosts or {}
+        # Scenario playback over the virtual clock: the same declarative
+        # scenarios the simulator and serving engine run, here modelling
+        # straggler hosts / congested links during read windows.
+        self.playback = host_playback(make_scenario(cfg.scenario),
+                                      cfg.num_hosts, cfg.scenario_horizon)
         self.rng = np.random.default_rng(cfg.seed + 1)
         self._clock = 0.0
         self.metrics = {"local": 0, "rack": 0, "remote": 0,
@@ -115,6 +128,7 @@ class DataPipeline:
         rate = [self.cfg.rate_local, self.cfg.rate_rack,
                 self.cfg.rate_remote][tier]
         rate *= self.slow.get(host, 1.0)
+        rate *= self.playback.rate_mult_at(self._clock, host, tier)
         service = float(self.rng.exponential(1.0 / max(rate, 1e-6)))
         self._clock += service
         self.router.claim(host)  # drain the queued task (read runs now)

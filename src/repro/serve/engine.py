@@ -19,6 +19,13 @@ by name (`EngineConfig.scheduler`) — the engine drives them all through the
 uniform `route -> Decision` / `claim -> Claim` surface, with no per-router
 branching; the robustness experiment at the serving level lives in
 benchmarks/bench_serving.py and examples/serve_cluster.py.
+
+Scenario playback (`EngineConfig.scenario`, `repro.workloads`): the same
+declarative scenarios the simulator runs drive time-varying replica
+slowdowns here — straggler windows and congestion sags inflate the observed
+service times the EWMA estimator consumes, so a blind router re-routes
+around a fault while it lasts.  bench_serving additionally uses the
+playback's arrival-rate track to time request submission.
 """
 
 from __future__ import annotations
@@ -36,6 +43,7 @@ from repro.core.cluster import ClusterSpec, tier_of
 from repro.core.estimator import EwmaRateEstimator
 from repro.core.policy import make_router
 from repro.data.pipeline import chunk_replicas
+from repro.workloads import ScenarioLike, host_playback, make_scenario
 from repro.models import params as params_lib, transformer as T
 from repro.models.config import ModelConfig
 
@@ -68,6 +76,10 @@ class EngineConfig:
     rate_rack: float = 0.7
     rate_remote: float = 0.4
     seed: int = 0
+    # scenario playback (repro.workloads): time-varying replica slowdowns
+    # on the engine-step clock; None -> "static" (all multipliers 1.0)
+    scenario: ScenarioLike = None
+    scenario_horizon: int = 400  # engine steps per playback cycle
 
 
 class Replica:
@@ -161,6 +173,12 @@ class ServingEngine:
                                      for _ in range(ecfg.num_replicas)]
         self.pending: deque = deque()          # deferred-assignment (global)
         self.slow = slow_replicas or {}
+        # One scenario seam for every scheduler: the playback inflates the
+        # observed service times the estimator sees, exactly like the static
+        # `slow_replicas` dict but time-varying (stragglers open and close).
+        self.playback = host_playback(make_scenario(ecfg.scenario),
+                                      ecfg.num_replicas,
+                                      float(ecfg.scenario_horizon))
         self.steps = 0
         self.assign_tiers = {0: 0, 1: 0, 2: 0}
 
@@ -198,8 +216,9 @@ class ServingEngine:
                 self.assign_tiers[req.tier] += 1
                 t0 = time.monotonic()
                 self.replicas[req.replica].admit(req)
-                elapsed = (time.monotonic() - t0) * self.slow.get(
-                    req.replica, 1.0)
+                slow = self.slow.get(req.replica, 1.0) * self.playback.slowdown(
+                    self.steps, req.replica, req.tier)
+                elapsed = (time.monotonic() - t0) * slow
                 self.router.on_complete(req.replica, req.tier,
                                         max(elapsed, 1e-4))
 

@@ -1,0 +1,24 @@
+"""Scenario subsystem: declarative time-varying workloads and fault
+injection, consumed by the simulator (compiled `Schedule`), the serving
+engine / data pipeline / benches (`HostPlayback`), and the drift study.
+See `repro.workloads.scenario` for the model and `repro.workloads.library`
+for the built-in scenarios.
+"""
+
+from repro.workloads.scenario import (  # noqa: F401
+    HostPlayback,
+    Scenario,
+    ScenarioConfig,
+    ScenarioLike,
+    Schedule,
+    Segment,
+    SlotKnobs,
+    arrival_steps,
+    available_scenarios,
+    compile_schedule,
+    host_playback,
+    make_scenario,
+    mean_lam_mult_over,
+    register_scenario,
+    slot_knobs,
+)

@@ -1,0 +1,370 @@
+"""Declarative time-varying workload scenarios (the Scenario subsystem).
+
+The paper's case for Balanced-PANDAS rests on "the change of traffic over
+time in addition to estimation errors of processing rates", yet a single
+static configuration — constant-rate Poisson arrivals, a frozen hot rack,
+true rates that never move — can only probe the estimation-error half.  A
+`Scenario` closes the gap: it is a declarative, piecewise-constant schedule
+over *normalized* run time ``[0, 1)`` of every workload knob the system
+exposes:
+
+  * arrival-rate modulation (``lam_mult``): diurnal ramps, flash crowds,
+    2-state MMPP bursts;
+  * locality drift (``p_hot``, ``hot_rack``): the hot rack migrating or the
+    hot fraction ramping;
+  * fault injection into the *true* service rates: per-server straggler
+    windows (``slow_servers``) and network congestion that sags whole tiers
+    (``tier_mult`` on beta / gamma).
+
+One scenario object feeds every layer through two projections:
+
+  * `compile_schedule` — dense, fixed-shape JAX arrays (`Schedule`) gathered
+    per slot by `slot_knobs(schedule, t)` inside the simulator's
+    `lax.scan`; shapes do not depend on ``t`` or on any batch dimension, so
+    `sweep()` still vmaps the whole load x error x seed grid into one XLA
+    program, and the simulator contains zero per-scenario branching.
+  * `host_playback` — the same segments as numpy arrays (`HostPlayback`)
+    for the host-side consumers: the serving engine (time-varying replica
+    slowdowns), `bench_serving` (arrival-time modulation), and the data
+    pipeline (straggler hosts on the virtual clock).
+
+Scenarios are registered by name with `@register_scenario` (mirroring the
+`@register_policy` registry in `core/policy.py`) so every driver —
+`sweep()`, `run_study()`, `drift_study()`, `bench_serving`, the data
+pipeline — selects them by string.  The ``"static"`` scenario is the
+identity: compiled, it multiplies every knob by 1.0, and the simulator
+reproduces the pre-scenario sample paths bitwise (common random numbers
+preserved; pinned by tests/test_workloads.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import numbers
+from typing import (Any, Callable, Dict, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Declarative pieces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One piecewise-constant span of a scenario, starting at fraction
+    ``start`` of the run and lasting until the next segment (or the end).
+
+    lam_mult     -- arrival-rate multiplier applied to the configured load
+    p_hot        -- absolute hot-traffic fraction; None keeps the config's
+    hot_rack     -- rack receiving the hot traffic (mod num_racks at compile)
+    tier_mult    -- (local, rack, remote) multipliers on the TRUE rates:
+                    network faults (rack-switch congestion sags beta/gamma)
+    slow_servers -- {server_id: rate_mult} per-server TRUE-rate multipliers
+                    (straggler windows; ids taken mod fleet size at compile)
+    """
+
+    start: float
+    lam_mult: float = 1.0
+    p_hot: Optional[float] = None
+    hot_rack: int = 0
+    tier_mult: Tuple[float, float, float] = (1.0, 1.0, 1.0)
+    slow_servers: Mapping[int, float] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not 0.0 <= self.start < 1.0:
+            raise ValueError(f"segment start must be in [0, 1), got {self.start}")
+        if self.lam_mult < 0.0:
+            raise ValueError(f"lam_mult must be >= 0, got {self.lam_mult}")
+        if self.p_hot is not None and not 0.0 <= self.p_hot <= 1.0:
+            raise ValueError(f"p_hot must be in [0, 1], got {self.p_hot}")
+        if self.hot_rack < 0:
+            raise ValueError(f"hot_rack must be >= 0, got {self.hot_rack}")
+        if len(self.tier_mult) != 3 or any(m <= 0.0 for m in self.tier_mult):
+            raise ValueError(f"tier_mult must be 3 positive values, "
+                             f"got {self.tier_mult}")
+        if any(v <= 0.0 for v in self.slow_servers.values()):
+            raise ValueError(f"slow_servers multipliers must be > 0, "
+                             f"got {dict(self.slow_servers)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, ordered tuple of `Segment`s covering [0, 1)."""
+
+    name: str
+    segments: Tuple[Segment, ...]
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("scenario needs at least one segment")
+        starts = [s.start for s in self.segments]
+        if starts[0] != 0.0:
+            raise ValueError(f"first segment must start at 0.0, got {starts[0]}")
+        if any(b <= a for a, b in zip(starts, starts[1:])):
+            raise ValueError(f"segment starts must strictly increase: {starts}")
+
+    @property
+    def mean_lam_mult(self) -> float:
+        """Time-average arrival multiplier over [0, 1) — the factor relating
+        the configured base load to the effective offered load."""
+        starts = [s.start for s in self.segments] + [1.0]
+        return float(sum(s.lam_mult * (b - a) for s, a, b in
+                         zip(self.segments, starts, starts[1:])))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Name + builder options, e.g. ``ScenarioConfig("stragglers",
+    {"factor": 0.2})`` — the scenario analogue of `PolicyConfig`."""
+
+    name: str
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+ScenarioLike = Union[str, ScenarioConfig, Scenario, None]
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors core/policy.py)
+# ---------------------------------------------------------------------------
+
+_SCENARIOS: Dict[str, Callable[..., Scenario]] = {}
+_BUILTIN_MODULES = ("repro.workloads.library",)
+_builtins_loaded = False
+
+
+def _load_builtins() -> None:
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    import importlib
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+    _builtins_loaded = True
+
+
+def register_scenario(name: str):
+    """Decorator: register ``builder(**options) -> Scenario`` under `name`."""
+    def deco(builder: Callable[..., Scenario]):
+        if name in _SCENARIOS:
+            raise ValueError(f"duplicate scenario registration: {name!r}")
+        _SCENARIOS[name] = builder
+        builder.scenario_name = name  # type: ignore[attr-defined]
+        return builder
+    return deco
+
+
+def available_scenarios() -> Tuple[str, ...]:
+    _load_builtins()
+    return tuple(sorted(_SCENARIOS))
+
+
+def make_scenario(spec: ScenarioLike, **options) -> Scenario:
+    """Resolve a name / ScenarioConfig / Scenario instance; None -> static."""
+    if spec is None:
+        spec = "static"
+    if isinstance(spec, Scenario):
+        if options:
+            raise ValueError("options only apply when building by name")
+        return spec
+    if isinstance(spec, ScenarioConfig):
+        if options:
+            raise ValueError("options only apply when building by name")
+        spec, options = spec.name, dict(spec.options)
+    _load_builtins()
+    try:
+        builder = _SCENARIOS[spec]
+    except KeyError:
+        raise ValueError(f"unknown scenario {spec!r}; "
+                         f"registered: {available_scenarios()}") from None
+    return builder(**options)
+
+
+# ---------------------------------------------------------------------------
+# Dense materialization shared by both projections
+# ---------------------------------------------------------------------------
+
+
+def _dense_segments(scn: Scenario, num_workers: int, num_racks: int,
+                    base_p_hot: float):
+    """Numpy per-segment arrays: (starts, lam, p_hot, hot_rack, tier, server).
+
+    starts are fractions in [0, 1); tier is (S, 3); server is (S, M).
+    """
+    s_count = len(scn.segments)
+    starts = np.array([s.start for s in scn.segments], np.float64)
+    lam = np.array([s.lam_mult for s in scn.segments], np.float32)
+    p_hot = np.array([base_p_hot if s.p_hot is None else s.p_hot
+                      for s in scn.segments], np.float32)
+    hot = np.array([s.hot_rack % max(num_racks, 1) for s in scn.segments],
+                   np.int32)
+    tier = np.array([s.tier_mult for s in scn.segments], np.float32)
+    server = np.ones((s_count, num_workers), np.float32)
+    for i, seg in enumerate(scn.segments):
+        for sid, mult in seg.slow_servers.items():
+            server[i, sid % num_workers] = mult
+    return starts, lam, p_hot, hot, tier, server
+
+
+# ---------------------------------------------------------------------------
+# JAX projection: fixed-shape schedule + per-slot gather
+# ---------------------------------------------------------------------------
+
+
+class Schedule(NamedTuple):
+    """Compiled scenario: per-segment arrays gathered by slot index inside
+    `lax.scan`.  All shapes are static per scenario (S segments, M servers),
+    so vmapping the simulator over any grid leaves them untouched."""
+
+    knots: jnp.ndarray      # (S,) int32 first slot of each segment
+    lam_mult: jnp.ndarray   # (S,) f32 arrival-rate multiplier
+    p_hot: jnp.ndarray      # (S,) f32 absolute hot fraction
+    hot_rack: jnp.ndarray   # (S,) int32 rack receiving hot traffic
+    rate_mult: jnp.ndarray  # (S, M, 3) f32 TRUE-rate multiplier per server/tier
+
+
+class SlotKnobs(NamedTuple):
+    """The scenario knobs in force during one slot."""
+
+    lam_mult: jnp.ndarray   # () f32
+    p_hot: jnp.ndarray      # () f32
+    hot_rack: jnp.ndarray   # () int32
+    rate_mult: jnp.ndarray  # (M, 3) f32
+
+
+def compile_schedule(scn: Scenario, topo, horizon: int,
+                     base_p_hot: float) -> Schedule:
+    """Compile a scenario against a `Topology` and a slot horizon."""
+    starts, lam, p_hot, hot, tier, server = _dense_segments(
+        scn, topo.num_servers, topo.num_racks, base_p_hot)
+    knots = np.floor(starts * horizon).astype(np.int32)
+    knots[0] = 0
+    rate = server[:, :, None] * tier[:, None, :]  # (S, M, 3)
+    return Schedule(
+        knots=jnp.asarray(knots),
+        lam_mult=jnp.asarray(lam),
+        p_hot=jnp.asarray(p_hot),
+        hot_rack=jnp.asarray(hot),
+        rate_mult=jnp.asarray(rate),
+    )
+
+
+def slot_knobs(sched: Schedule, t: jnp.ndarray) -> SlotKnobs:
+    """Gather the segment in force at slot `t` (trace-safe, fixed shapes).
+
+    With duplicate knots (segments shorter than one slot at small horizons)
+    the LAST matching segment wins — `side="right"` lands after the run of
+    duplicates.
+    """
+    i = jnp.searchsorted(sched.knots, t.astype(jnp.int32), side="right") - 1
+    return SlotKnobs(lam_mult=sched.lam_mult[i], p_hot=sched.p_hot[i],
+                     hot_rack=sched.hot_rack[i], rate_mult=sched.rate_mult[i])
+
+
+def mean_lam_mult_over(sched: Schedule, start_slot: int,
+                       horizon: int) -> float:
+    """Exact time-average of lam_mult over slots [start_slot, horizon) —
+    the Little's-law denominator correction for the measurement window."""
+    knots = np.asarray(sched.knots)
+    lam = np.asarray(sched.lam_mult, np.float64)
+    seg = np.searchsorted(knots, np.arange(start_slot, horizon),
+                          side="right") - 1
+    return float(lam[seg].mean())
+
+
+# ---------------------------------------------------------------------------
+# Host projection: numpy playback for engine / pipeline / benches
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HostPlayback:
+    """Host-side scenario playback over continuous (or step) time.
+
+    Time wraps modulo `horizon`, so one playback cycle repeats — natural for
+    diurnal patterns and harmless for one-shot windows as long as the run
+    fits one horizon.  All consumers (serving engine, data pipeline,
+    bench_serving) read the same compiled segments through this object, so
+    there is no per-scenario branching on the host paths either.
+    """
+
+    horizon: float
+    starts: np.ndarray       # (S,) segment start fractions
+    lam_mult: np.ndarray     # (S,)
+    tier_mult: np.ndarray    # (S, 3)
+    server_mult: np.ndarray  # (S, M)
+
+    def _seg(self, t: float) -> int:
+        u = (float(t) % self.horizon) / self.horizon
+        return int(np.searchsorted(self.starts, u, side="right")) - 1
+
+    def lam_mult_at(self, t: float) -> float:
+        return float(self.lam_mult[self._seg(t)])
+
+    def rate_mult_at(self, t: float, worker: int,
+                     tier: Optional[int] = None) -> float:
+        """TRUE-rate multiplier for `worker` at time `t` (x tier sag when the
+        locality tier of the work is known)."""
+        s = self._seg(t)
+        mult = float(self.server_mult[s, worker])
+        if tier is not None and 0 <= tier <= 2:
+            mult *= float(self.tier_mult[s, tier])
+        return mult
+
+    def slowdown(self, t: float, worker: int,
+                 tier: Optional[int] = None) -> float:
+        """Observed service-time inflation factor (1 / rate multiplier)."""
+        return 1.0 / max(self.rate_mult_at(t, worker, tier), 1e-6)
+
+
+def host_playback(scn: Scenario, num_workers: int,
+                  horizon: float) -> HostPlayback:
+    """Project a scenario to host-side numpy playback over `num_workers`.
+
+    Host consumers (engine, pipeline, benches) place work by rendezvous
+    hashing, so only the arrival-rate and fault tracks are materialized —
+    the locality knobs (p_hot / hot_rack) are simulator-only.
+    """
+    if not (isinstance(horizon, numbers.Real) and horizon > 0):
+        raise ValueError(f"playback horizon must be > 0, got {horizon}")
+    starts, lam, _p_hot, _hot, tier, server = _dense_segments(
+        scn, num_workers, num_racks=1, base_p_hot=0.5)
+    return HostPlayback(horizon=float(horizon), starts=starts, lam_mult=lam,
+                        tier_mult=tier, server_mult=server)
+
+
+def arrival_steps(playback: HostPlayback, n_requests: int,
+                  base_per_step: float) -> np.ndarray:
+    """Deterministic arrival step for each of `n_requests` under the
+    playback's time-varying intensity ``base_per_step * lam_mult(t)``.
+
+    Fractional-accumulator thinning: walk steps, accumulate intensity, emit
+    one arrival per accumulated unit.  Used by bench_serving to drive
+    request submission times from the same scenario that drives slowdowns.
+    """
+    if base_per_step <= 0:
+        raise ValueError(f"base_per_step must be > 0, got {base_per_step}")
+    if float(playback.lam_mult.max()) <= 0.0:
+        raise ValueError("scenario has lam_mult == 0 everywhere: no "
+                         "arrivals would ever be emitted")
+    steps = np.empty(n_requests, np.int64)
+    acc, t, emitted = 0.0, 0, 0
+    # Generous bound: enough steps to emit everything at the mean intensity,
+    # plus slack cycles.  Guards against degenerate playbacks where only
+    # zero-rate segments land on integer steps (e.g. horizon ~ 1).
+    max_steps = int(10 * (n_requests / base_per_step + playback.horizon)) + 100
+    while emitted < n_requests:
+        if t > max_steps:
+            raise RuntimeError(
+                f"arrival_steps emitted only {emitted}/{n_requests} after "
+                f"{t} steps — scenario intensity too low on this playback")
+        acc += base_per_step * playback.lam_mult_at(t)
+        while acc >= 1.0 and emitted < n_requests:
+            steps[emitted] = t
+            emitted += 1
+            acc -= 1.0
+        t += 1
+    return steps

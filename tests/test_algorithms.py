@@ -127,7 +127,7 @@ def test_jsq_mw_slot_conserves_tasks():
     s2, _ = mw.slot_step(s, jax.random.PRNGKey(0), types, active, EST, TRUE3,
                          RACK_OF)
     total_before = 5 + 3 + 7 + 1
-    started = int(jnp.sum(s2.serving_rate > 0))
+    started = int(jnp.sum(s2.serving_tier > 0))
     assert int(jnp.sum(s2.q)) == total_before - started
 
 
@@ -167,7 +167,7 @@ def test_priority_serves_own_queue_first():
                                TRUE3, RACK_OF)
     # Server 3 serves its own (local) task at rate alpha despite queue 7
     # being much longer.
-    assert float(s2.serving_rate[3]) == pytest.approx(0.5)
+    assert int(s2.serving_tier[3]) == loc.LOCAL
     assert int(s2.q[3]) == 0
 
 
@@ -177,11 +177,12 @@ def test_fifo_order_and_drops():
     s = fifo.init_state(TOPO, cap=4)
     types = jnp.tile(jnp.array([[0, 1, 2]], jnp.int32), (6, 1))
     active = jnp.ones((6,), bool)
-    # 12 idle servers will drain everything pushed; to test drops push with no
-    # servers available: pre-mark all servers busy.
-    s = s._replace(serving_rate=jnp.full((12,), 1e-9, jnp.float32))
+    # 12 idle servers would drain everything pushed; to test drops push with
+    # no servers available: pre-mark all servers busy, with near-zero true
+    # rates so none of them completes (and frees up) within the slot.
+    s = s._replace(serving_tier=jnp.full((12,), loc.REMOTE, jnp.int32))
     s2, _ = fifo.slot_step(s, jax.random.PRNGKey(0), types, active, EST,
-                           TRUE3, RACK_OF)
+                           jnp.full((3,), 1e-9, jnp.float32), RACK_OF)
     assert int(s2.count) == 4
     assert int(s2.drops) == 2
 
@@ -211,18 +212,19 @@ def test_claim_loop_never_overdraws(seed):
     key = jax.random.PRNGKey(seed)
     q0 = jax.random.randint(jax.random.fold_in(key, 0), (12,), 0, 3)
     busy = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5, (12,))
-    sr0 = jnp.where(busy, 0.5, 0.0)
+    st0 = jnp.where(busy, loc.LOCAL, 0).astype(jnp.int32)
     from repro.core import claiming
     sid = jnp.arange(12)
 
     def score_fn(m, qv):
         return loc.pair_rate(m, sid, RACK_OF, TRUE3) * qv.astype(jnp.float32)
 
-    def rate_fn(m, n):
-        return loc.pair_rate(m, n, RACK_OF, TRUE3)
+    def tier_fn(m, n):
+        return claiming.pair_tier(m, n, RACK_OF)
 
-    q1, sr1 = claiming.claim_loop(q0.astype(jnp.int32), sr0,
-                                  jax.random.fold_in(key, 2), score_fn, rate_fn)
+    q1, sr1 = claiming.claim_loop(q0.astype(jnp.int32), st0,
+                                  jax.random.fold_in(key, 2), score_fn,
+                                  tier_fn)
     assert (np.asarray(q1) >= 0).all()
     started = int(jnp.sum((sr1 > 0) & ~busy))
     claimed = int(jnp.sum(q0) - jnp.sum(q1))

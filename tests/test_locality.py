@@ -57,11 +57,78 @@ def test_capacity_formula():
     assert all(a >= b for a, b in zip(caps, caps[1:]))
 
 
+def _fluid_lp_capacity(m, mr, p_hot, rates):
+    """Brute-force fluid LP for the hot-rack pattern (independent of the
+    closed form in `capacity_hot_rack`).
+
+    Variables: x0/x1 = hot traffic served by rack-0 (alpha) / other racks
+    (gamma); y0/y1 = uniform traffic served by rack-0 / other racks (alpha
+    everywhere — uniform types have local replicas anywhere).  Dominated
+    service options (hot at beta inside rack 0, uniform off-tier) can never
+    raise the optimum, so they are omitted.  Maximize Lambda subject to
+    flow conservation and per-pool utilisation <= capacity.
+    """
+    import scipy.optimize as sopt
+    a, g = rates.alpha, rates.gamma
+    # vars: [Lam, x0, x1, y0, y1]; minimize -Lam
+    c = [-1.0, 0.0, 0.0, 0.0, 0.0]
+    a_eq = [[-p_hot, 1.0, 1.0, 0.0, 0.0],
+            [-(1.0 - p_hot), 0.0, 0.0, 1.0, 1.0]]
+    b_eq = [0.0, 0.0]
+    a_ub = [[0.0, 1.0 / a, 0.0, 1.0 / a, 0.0],
+            [0.0, 0.0, 1.0 / g, 0.0, 1.0 / a]]
+    b_ub = [float(mr), float(m - mr)]
+    res = sopt.linprog(c, A_ub=a_ub, b_ub=b_ub, A_eq=a_eq, b_eq=b_eq,
+                       bounds=[(0, None)] * 5)
+    assert res.success, res.message
+    return -res.fun
+
+
+@pytest.mark.parametrize("m,mr,p_hot", [
+    (12, 4, 0.5), (24, 6, 0.1), (24, 6, 0.2), (24, 6, 0.5), (24, 6, 0.9),
+    (18, 6, 0.7), (48, 8, 0.35),
+])
+def test_capacity_matches_bruteforce_fluid_lp(m, mr, p_hot):
+    pytest.importorskip("scipy")
+    rates = loc.Rates(0.5, 0.45, 0.25)
+    closed = loc.capacity_hot_rack(loc.Topology(m, mr), rates, p_hot)
+    lp = _fluid_lp_capacity(m, mr, p_hot, rates)
+    assert closed == pytest.approx(lp, rel=1e-6)
+
+
 def test_rates_validation_and_ht_condition():
     assert loc.Rates(0.5, 0.45, 0.25).heavy_traffic_optimal  # beta^2 > a*g
     assert not loc.Rates(0.9, 0.5, 0.4).heavy_traffic_optimal
     with pytest.raises(ValueError):
         loc.Rates(0.5, 0.6, 0.25)  # beta > alpha
+
+
+def test_rates_scaled_clamps_uniformly():
+    r = loc.Rates(0.5, 0.45, 0.25)
+    down = r.scaled(0.8)
+    assert (down.alpha, down.beta, down.gamma) == \
+        pytest.approx((0.4, 0.36, 0.2))
+    up = r.scaled(1.9)
+    assert up.alpha == pytest.approx(0.95)
+    assert up.gamma == pytest.approx(0.475)
+    assert r.scaled(2.0).alpha == 1.0  # clamped into the valid (0, 1] range
+    with pytest.raises(ValueError):
+        r.scaled(2.5)  # clamp collapses alpha == beta: ordering invalid
+
+
+def test_traffic_validation():
+    loc.Traffic(lam_total=5.0, p_hot=0.0)
+    loc.Traffic(lam_total=5.0, p_hot=1.0)
+    with pytest.raises(ValueError):
+        loc.Traffic(lam_total=5.0, p_hot=-0.1)
+    with pytest.raises(ValueError):
+        loc.Traffic(lam_total=5.0, p_hot=1.5)
+    with pytest.raises(ValueError):
+        loc.Traffic(lam_total=5.0, max_arrivals=0)
+    with pytest.raises(ValueError):
+        loc.Traffic(lam_total=-1.0)
+    # traced / array-valued knobs skip host-side validation (jit path)
+    loc.Traffic(lam_total=jnp.float32(3.0), p_hot=jnp.float32(0.5))
 
 
 def test_sample_task_types_distinct_sorted_and_hot():

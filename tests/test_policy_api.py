@@ -43,7 +43,8 @@ def scripted_trace(n=40, seed=5):
 
 def test_every_policy_and_router_is_registered():
     assert set(available_policies()) == {
-        "balanced_pandas", "jsq_maxweight", "priority", "fifo", "pandas_po2"}
+        "balanced_pandas", "jsq_maxweight", "priority", "fifo", "pandas_po2",
+        "blind_pandas"}
     assert set(available_routers()) == {
         "balanced_pandas", "jsq_maxweight", "fifo", "pandas_po2"}
 
@@ -187,14 +188,15 @@ def test_fifo_router_defers_and_tracks_backlog():
         d = router.route(task)
         assert d.deferred and d.worker == -1
 
-    # same arrivals through the JAX policy; all servers busy, so the ring
-    # buffer holds exactly the router's backlog
+    # same arrivals through the JAX policy; all servers busy (near-zero true
+    # rates keep them busy through the slot), so the ring buffer holds
+    # exactly the router's backlog
     s = fifo_mod.init_state(TOPO, cap=64)
-    s = s._replace(serving_rate=jnp.full((M,), 1e-9, jnp.float32))
+    s = s._replace(serving_tier=jnp.full((M,), 3, jnp.int32))
     types = jnp.asarray(trace, jnp.int32)
     active = jnp.ones((len(trace),), bool)
     s, _ = fifo_mod.slot_step(s, jax.random.PRNGKey(0), types, active, EST,
-                              jnp.asarray(RATES, jnp.float32), RACK_OF)
+                              jnp.full((3,), 1e-9, jnp.float32), RACK_OF)
     assert int(s.count) == len(router.queue) == len(trace)
 
     claims = 0

@@ -87,3 +87,29 @@ def test_locality_preference_in_assignment():
     eng = ServingEngine(CFG, PARAMS, ECFG)
     eng.run_until_drained(reqs, max_steps=200)
     assert eng.assign_tiers[0] >= sum(eng.assign_tiers.values()) * 0.7
+
+
+def test_engine_scenario_playback_feeds_estimator():
+    """Scenario playback inflates observed service times during the
+    straggler window, and the EWMA estimator sees it: the straggler
+    replica's learned local rate must fall below a clean replica's."""
+    from repro.workloads import make_scenario
+
+    scn = make_scenario("stragglers", servers=(1,), factor=0.05,
+                        start=0.01, width=0.98)
+    ecfg = EngineConfig(num_replicas=4, replicas_per_pod=2,
+                        slots_per_replica=2, max_len=64,
+                        prefill_buckets=(16,), scenario=scn,
+                        scenario_horizon=100)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size, 6).astype(np.int32),
+                    max_new_tokens=2, prefix_id=i % 4) for i in range(16)]
+    eng = ServingEngine(CFG, PARAMS, ecfg)
+    assert eng.playback.slowdown(50.0, 1) == pytest.approx(20.0)
+    out = eng.run_until_drained(reqs, max_steps=300)
+    assert all(r.finish_time > 0 for r in out)
+    rates = eng.estimator.rates  # (R, 3)
+    counts = eng.estimator.sample_counts
+    if counts[1, 0] >= 1 and counts[0, 0] >= 1:
+        assert rates[1, 0] < rates[0, 0]
