@@ -14,10 +14,17 @@ perturbed settings — the paper's conclusion, live on real model execution.
 (`repro.workloads`) drives BOTH request arrival times (the scenario's
 lam_mult track, via `workloads.arrival_steps`) and replica slowdowns (the
 engine's own playback), so a flash crowd arrives mid-straggler-window on
-real model execution.
+real model execution.  The scenario grid includes a recorded-trace replay
+("trace": the bundled flash-crowd day compiled by `repro.workloads.trace`),
+and every scenario run is re-recorded through the engine's trace export
+hook (`ServingEngine.recorded_trace`) so it can be replayed
+deterministically — `replay_trace` is the standalone replay driver.
 """
 
 from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
 
 import numpy as np
 
@@ -61,13 +68,52 @@ def bench(fast: bool = True):
     return rows
 
 
-def bench_scenarios(fast: bool = True):
-    """Scenario playback on the live engine: timed arrivals + slowdowns."""
+def _run_scenario_once(cfg, prm, prompts, scheduler, spec, label,
+                       max_steps=800):
+    """One engine run with scenario-timed arrivals; returns (row, engine)."""
+    from repro.serve.engine import EngineConfig, Request, ServingEngine
+    from repro.workloads import arrival_steps
+
+    ecfg = EngineConfig(num_replicas=4, replicas_per_pod=2,
+                        slots_per_replica=2, max_len=64,
+                        prefill_buckets=(16,), scheduler=scheduler,
+                        scenario=spec, scenario_horizon=200)
+    eng = ServingEngine(cfg, prm, ecfg)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4, prefix_id=i % 5)
+            for i, p in enumerate(prompts)]
+    # The scenario's arrival track times the submissions; its fault track
+    # (engine playback) inflates observed service times.
+    when = arrival_steps(eng.playback, len(reqs),
+                         base_per_step=len(reqs) / 60.0)
+    nxt = 0
+    while any(r.finish_time == 0.0 for r in reqs):
+        while nxt < len(reqs) and when[nxt] <= eng.steps:
+            eng.submit(reqs[nxt])
+            nxt += 1
+        eng.step()
+        if eng.steps > max_steps:
+            raise RuntimeError(
+                f"scenario bench did not drain ({scheduler}, {label})")
+    row = (f"serve_{scheduler}_scn_{label}", float(eng.steps),
+           f"tiers={eng.assign_tiers}")
+    return row, eng
+
+
+def bench_scenarios(fast: bool = True,
+                    export_dir: Optional[str] = "experiments/traces"):
+    """Scenario playback on the live engine: timed arrivals + slowdowns.
+
+    The grid covers synthetic drift plus a recorded-trace replay
+    ("trace": the bundled flash-crowd day).  With `export_dir` set, every
+    run is re-recorded through the engine's trace export hook and written
+    as ``<scheduler>_<scenario>.jsonl`` — load any of them back with
+    ``scenario=ScenarioConfig("trace", {"path": ...})`` to replay the
+    exact observed traffic.
+    """
     import jax
     from repro.configs import registry
     from repro.models import params as P
-    from repro.serve.engine import EngineConfig, Request, ServingEngine
-    from repro.workloads import arrival_steps
+    from repro.workloads import ScenarioConfig, save_trace
 
     cfg = registry.get_smoke_config("chatglm3_6b")
     prm = P.init_params(cfg, jax.random.PRNGKey(0))
@@ -76,32 +122,51 @@ def bench_scenarios(fast: bool = True):
     prompts = [rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
                for _ in range(n_req)]
 
+    grid = (("static", "static"), ("flash_crowd", "flash_crowd"),
+            ("stragglers", "stragglers"),
+            ("trace", ScenarioConfig("trace", {"name": "flash_day",
+                                               "max_segments": 32})))
     rows = []
     for scheduler in ("balanced_pandas", "jsq_maxweight"):
-        for scenario in ("static", "flash_crowd", "stragglers"):
-            ecfg = EngineConfig(num_replicas=4, replicas_per_pod=2,
-                                slots_per_replica=2, max_len=64,
-                                prefill_buckets=(16,), scheduler=scheduler,
-                                scenario=scenario, scenario_horizon=200)
-            eng = ServingEngine(cfg, prm, ecfg)
-            reqs = [Request(rid=i, prompt=p, max_new_tokens=4,
-                            prefix_id=i % 5)
-                    for i, p in enumerate(prompts)]
-            # The scenario's arrival track times the submissions; its fault
-            # track (engine playback) inflates observed service times.
-            when = arrival_steps(eng.playback, len(reqs),
-                                 base_per_step=len(reqs) / 60.0)
-            nxt = 0
-            while any(r.finish_time == 0.0 for r in reqs):
-                while nxt < len(reqs) and when[nxt] <= eng.steps:
-                    eng.submit(reqs[nxt])
-                    nxt += 1
-                eng.step()
-                if eng.steps > 800:
-                    raise RuntimeError(
-                        f"scenario bench did not drain ({scheduler}, "
-                        f"{scenario})")
-            rows.append((f"serve_{scheduler}_scn_{scenario}",
-                         float(eng.steps),
-                         f"tiers={eng.assign_tiers}"))
+        for label, spec in grid:
+            row, eng = _run_scenario_once(cfg, prm, prompts, scheduler,
+                                          spec, label)
+            rows.append(row)
+            if export_dir is not None:
+                out = Path(export_dir)
+                out.mkdir(parents=True, exist_ok=True)
+                save_trace(eng.recorded_trace(name=f"{scheduler}_{label}"),
+                           out / f"{scheduler}_{label}.jsonl")
     return rows
+
+
+def replay_trace(spec=None, scheduler: str = "balanced_pandas",
+                 fast: bool = True, export_path: Optional[str] = None):
+    """Replay one trace-compiled Scenario through the live engine.
+
+    `spec` is anything `make_scenario` accepts (default: the bundled
+    "diurnal_week" trace).  The scenario times request submission and
+    inflates observed service times; with `export_path` the run is
+    re-recorded and saved, closing the record -> replay loop.  Returns
+    the bench rows.
+    """
+    import jax
+    from repro.configs import registry
+    from repro.models import params as P
+    from repro.workloads import ScenarioConfig, make_scenario, save_trace
+
+    cfg = registry.get_smoke_config("chatglm3_6b")
+    prm = P.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 12 if fast else 48
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+               for _ in range(n_req)]
+    scn = make_scenario(spec if spec is not None
+                        else ScenarioConfig("trace", {"max_segments": 32}))
+    row, eng = _run_scenario_once(cfg, prm, prompts, scheduler, scn,
+                                  scn.name.replace(":", "_"),
+                                  max_steps=1200)
+    if export_path is not None:
+        Path(export_path).parent.mkdir(parents=True, exist_ok=True)
+        save_trace(eng.recorded_trace(name=scn.name), export_path)
+    return [row]

@@ -3,6 +3,10 @@ serving, and roofline benches.  Prints ``name,us_per_call,derived`` CSV and
 writes figure data to experiments/figures/*.csv.
 
     PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--help`` lists every registered scenario and policy with its one-line
+description (the registries are self-describing; see
+`workloads.scenario_descriptions` / `core.policy.policy_descriptions`).
 """
 
 from __future__ import annotations
@@ -14,13 +18,37 @@ import time
 from pathlib import Path
 
 
+def _registry_epilog() -> str:
+    """Render the scenario/policy registries for --help."""
+    from repro import workloads as wl
+    from repro.core import policy as pol
+
+    def block(title, entries):
+        lines = [f"{title}:"]
+        for name, desc in entries.items():
+            lines.append(f"  {name:18s} {desc}")
+        return lines
+
+    lines = block("registered scenarios", wl.scenario_descriptions())
+    lines += block("registered policies (simulator)",
+                   pol.policy_descriptions())
+    lines += block("registered routers (serving engine / data pipeline)",
+                   pol.router_descriptions())
+    return "\n".join(lines)
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    # the epilog imports every registry module — only pay that for --help
+    wants_help = any(a in ("-h", "--help") for a in sys.argv[1:])
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n\n")[0],
+        epilog=_registry_epilog() if wants_help else None,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale horizons (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig34,fig56,drift,kernels,"
-                         "serving,serving_scenarios,roofline")
+                         "serving,serving_scenarios,trace_replay,roofline")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -62,6 +90,8 @@ def main() -> None:
     section("kernels", lambda: bench_kernels.bench(fast))
     section("serving", lambda: bench_serving.bench(fast))
     section("serving_scenarios", lambda: bench_serving.bench_scenarios(fast))
+    section("trace_replay", lambda: bench_serving.replay_trace(
+        fast=fast, export_path="experiments/traces/replayed.jsonl"))
     section("roofline", lambda: bench_roofline.bench(fast))
 
     if fig_rows:

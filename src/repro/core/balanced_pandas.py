@@ -159,7 +159,12 @@ def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
 
 @register_policy
 class BalancedPandasPolicy(SlotPolicy):
-    """Balanced-PANDAS as a registered `SlotPolicy`."""
+    """Balanced-PANDAS: weighted-workload routing over estimated per-tier
+    rates — the paper's headline throughput- and heavy-traffic-optimal
+    policy.  Arrivals go to the server minimizing workload W / rate over
+    local / rack-local / remote tiers; robust to rate mis-estimation
+    (paper §4) and the reference point every other arm is compared to.
+    """
 
     name = "balanced_pandas"
 

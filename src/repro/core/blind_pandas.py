@@ -38,7 +38,9 @@ class BlindPandasState(NamedTuple):
 
 @register_policy
 class BlindPandasPolicy(SlotPolicy):
-    """Balanced-PANDAS with self-estimated rates as a registered policy.
+    """Blind GB-PANDAS: Balanced-PANDAS that starts from a prior and keeps
+    per-(server, tier) EWMA rate estimates inside the scan state,
+    re-learning online when the true rates drift.
 
     Options: ``prior`` — (alpha0, beta0, gamma0) the estimates start from;
     ``decay`` — EWMA decay per observation; ``floor`` — lower clamp on the

@@ -40,7 +40,10 @@ class ClusterSpec:
 
 @register_router
 class BalancedPandasRouter(Router):
-    """Incremental Balanced-PANDAS over an abstract worker fleet."""
+    """Incremental Balanced-PANDAS over an abstract worker fleet: weighted
+    workload / estimated rate argmin per arrival, with the production
+    two-stage tie-break (minimal score, then fastest tier, then random).
+    """
 
     name = "balanced_pandas"
 
@@ -142,7 +145,9 @@ class PandasPoDRouter(BalancedPandasRouter):
 
 @register_router
 class JsqMaxWeightRouter(Router):
-    """Incremental JSQ-MaxWeight baseline over the same fleet abstraction."""
+    """Incremental JSQ-MaxWeight baseline: shortest-queue routing with
+    MaxWeight-style claiming over the same fleet abstraction.
+    """
 
     name = "jsq_maxweight"
 

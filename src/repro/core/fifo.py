@@ -98,7 +98,8 @@ def slot_step(s: FifoState, key: jax.Array, types: jnp.ndarray,
 
 @register_policy
 class FifoPolicy(SlotPolicy):
-    """Global-FIFO as a registered `SlotPolicy`.
+    """Global-FIFO: one shared rate-oblivious queue, idle servers pull in
+    arrival order (the Hadoop-default floor every comparison stands on).
 
     `cap` (ring-buffer bound, a static shape) is the policy option that used
     to be special-cased in the simulator; it now travels in a

@@ -75,7 +75,11 @@ def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
 
 @register_policy
 class JsqMaxWeightPolicy(SlotPolicy):
-    """JSQ-MaxWeight as a registered `SlotPolicy`."""
+    """JSQ-MaxWeight: join-shortest-queue routing + MaxWeight service over
+    the (m, n) pair rates — throughput-optimal but NOT heavy-traffic
+    delay-optimal, and the policy the paper shows degrades most under
+    rate mis-estimation and drift.
+    """
 
     name = "jsq_maxweight"
 

@@ -84,7 +84,9 @@ def slot_step(s: bp.PandasState, key: jax.Array, types: jnp.ndarray,
 
 @register_policy
 class PandasPoDPolicy(SlotPolicy):
-    """Power-of-d Balanced-PANDAS as a registered `SlotPolicy`.
+    """Power-of-d Balanced-PANDAS: score only the task's 3 locals plus d
+    sampled candidates instead of all M servers — O(d) routing that
+    trades a little exact-rate delay for a narrower error band.
 
     ``d`` is a static option (it shapes the candidate sample) carried by
     ``PolicyConfig("pandas_po2", {"d": ...})``; default 2, the classic

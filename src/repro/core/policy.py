@@ -252,6 +252,22 @@ def available_routers() -> Tuple[str, ...]:
     return tuple(sorted(_ROUTERS))
 
 
+def policy_descriptions() -> Dict[str, str]:
+    """``{name: one-line description}`` for every registered `SlotPolicy`,
+    from the first sentence of each class docstring — the self-describing
+    registry surface behind ``benchmarks/run.py --help``."""
+    from repro.utils.doc import first_doc_line
+    _load_builtins()
+    return {n: first_doc_line(c) for n, c in sorted(_POLICIES.items())}
+
+
+def router_descriptions() -> Dict[str, str]:
+    """``{name: one-line description}`` for every registered `Router`."""
+    from repro.utils.doc import first_doc_line
+    _load_builtins()
+    return {n: first_doc_line(c) for n, c in sorted(_ROUTERS.items())}
+
+
 def get_policy_cls(name: str) -> Type[SlotPolicy]:
     _load_builtins()
     try:

@@ -72,7 +72,11 @@ def slot_step(s: PriorityState, key: jax.Array, types: jnp.ndarray,
 
 @register_policy
 class PriorityPolicy(SlotPolicy):
-    """The Priority algorithm as a registered `SlotPolicy`."""
+    """Priority: serve local tasks first, then rack-local, then remote —
+    rate-oblivious 2-level design with a smaller capacity region than
+    Balanced-PANDAS (its delay inside that region can still be excellent;
+    see EXPERIMENTS.md §Reproduction).
+    """
 
     name = "priority"
 

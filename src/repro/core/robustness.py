@@ -26,13 +26,13 @@ online estimator buys back.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence
+from typing import Dict, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import locality as loc, simulator as sim
 from repro.core.policy import PolicyConfig, PolicyLike
-from repro.workloads import ScenarioLike
+from repro.workloads import Scenario, ScenarioConfig, ScenarioLike
 
 EPS_GRID = (0.05, 0.10, 0.15, 0.20, 0.25, 0.30)
 RATE_AWARE = ("balanced_pandas", "pandas_po2", "jsq_maxweight")
@@ -100,7 +100,8 @@ def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
 
 
 def drift_study(cfg: StudyConfig,
-                scenarios: Sequence[str] = DRIFT_SCENARIOS,
+                scenarios: Union[Sequence[str],
+                                 Mapping[str, ScenarioLike]] = DRIFT_SCENARIOS,
                 load: float = 0.75) -> Dict:
     """Fixed-prior vs blind-EWMA Balanced-PANDAS under each scenario.
 
@@ -108,7 +109,16 @@ def drift_study(cfg: StudyConfig,
     fixed prior — so any blind win is pure drift-tracking, not prior
     quality.  Returns delay/throughput/final_n[scenario][arm] arrays of
     shape (S_seeds,) plus the winner per scenario.
+
+    `scenarios` is a sequence of registered names, or — for scenarios that
+    need options, e.g. a compiled trace replay — a ``{label: ScenarioLike}``
+    mapping; results are keyed by the label either way.
     """
+    if isinstance(scenarios, Mapping):
+        scen_map: Dict[str, ScenarioLike] = dict(scenarios)
+    else:
+        scen_map = {s.name if isinstance(s, (Scenario, ScenarioConfig))
+                    else str(s): s for s in scenarios}
     r = cfg.sim.true_rates
     prior = (r.alpha, r.beta, r.gamma)
     arms: Dict[str, PolicyLike] = {
@@ -121,34 +131,35 @@ def drift_study(cfg: StudyConfig,
     est_exact = sim.make_estimates(cfg.sim, "network", 0.0, -1)[None]
 
     out: Dict = {"capacity": cap, "load": load, "arms": tuple(arms),
-                 "scenarios": tuple(scenarios), "delay": {},
+                 "scenarios": tuple(scen_map), "delay": {},
                  "throughput": {}, "final_n": {}}
-    for scen in scenarios:
+    for scen, spec in scen_map.items():
         for name in ("delay", "throughput", "final_n"):
             out[name][scen] = {}
         for arm, policy in arms.items():
             res = sim.sweep(policy, cfg.sim, lam, est_exact, seeds,
-                            scenario=scen)
+                            scenario=spec)
             out["delay"][scen][arm] = res["mean_delay"][0, 0]
             out["throughput"][scen][arm] = res["throughput"][0, 0]
             out["final_n"][scen][arm] = res["final_n"][0, 0]
     out["blind_wins"] = {
         scen: float(out["delay"][scen]["blind_ewma"].mean())
         < float(out["delay"][scen]["fixed_prior"].mean())
-        for scen in scenarios}
+        for scen in scen_map}
     return out
 
 
 def summarize_drift(study: Dict) -> str:
     """Human-readable drift-study table (one row per scenario)."""
-    lines = [f"{'scenario':16s} {'fixed_prior':>12s} {'blind_ewma':>12s}  "
-             f"winner   (mean delay, slots; load "
+    width = max([16] + [len(s) for s in study["scenarios"]])
+    lines = [f"{'scenario':{width}s} {'fixed_prior':>12s} {'blind_ewma':>12s}"
+             f"  winner   (mean delay, slots; load "
              f"{study['load']:.2f} x static capacity)"]
     for scen in study["scenarios"]:
         d_fix = float(study["delay"][scen]["fixed_prior"].mean())
         d_bl = float(study["delay"][scen]["blind_ewma"].mean())
         win = "blind" if study["blind_wins"][scen] else "fixed"
-        lines.append(f"{scen:16s} {d_fix:12.2f} {d_bl:12.2f}  {win}")
+        lines.append(f"{scen:{width}s} {d_fix:12.2f} {d_bl:12.2f}  {win}")
     return "\n".join(lines)
 
 

@@ -14,7 +14,8 @@ the robustness property the paper establishes is exactly what makes the
 blind version deployable.  Time-varying faults come from the scenario
 subsystem (`PipelineConfig.scenario`, `repro.workloads`): straggler windows
 and congestion sags play back on the virtual clock, and the estimator
-tracks them while they last.
+tracks them while they last — including windows replayed from a recorded
+cluster trace (``scenario=ScenarioConfig("trace", {...})``).
 
 Tokens are synthesized deterministically from (seed, chunk_id), so any two
 runs — and any resharding of hosts — produce identical global batches

@@ -25,7 +25,11 @@ declarative scenarios the simulator runs drive time-varying replica
 slowdowns here — straggler windows and congestion sags inflate the observed
 service times the EWMA estimator consumes, so a blind router re-routes
 around a fault while it lasts.  bench_serving additionally uses the
-playback's arrival-rate track to time request submission.
+playback's arrival-rate track to time request submission.  The loop closes
+in the other direction too: every submit is logged on the engine-step
+clock, and `ServingEngine.recorded_trace` re-records a run as a
+`workloads.Trace` that replays deterministically through the whole stack
+(``scenario="trace"``).
 """
 
 from __future__ import annotations
@@ -43,7 +47,8 @@ from repro.core.cluster import ClusterSpec, tier_of
 from repro.core.estimator import EwmaRateEstimator
 from repro.core.policy import make_router
 from repro.data.pipeline import chunk_replicas
-from repro.workloads import ScenarioLike, host_playback, make_scenario
+from repro.workloads import (ScenarioLike, Trace, host_playback,
+                             make_scenario, trace_from_arrivals)
 from repro.models import params as params_lib, transformer as T
 from repro.models.config import ModelConfig
 
@@ -181,10 +186,25 @@ class ServingEngine:
                                       float(ecfg.scenario_horizon))
         self.steps = 0
         self.assign_tiers = {0: 0, 1: 0, 2: 0}
+        # engine-step index of every submit, for trace export (recorded_trace)
+        self.arrival_log: List[int] = []
 
     def submit(self, req: Request) -> None:
         req.arrival = time.monotonic()
+        self.arrival_log.append(self.steps)
         self.queue.append(req)
+
+    def recorded_trace(self, num_intervals: int = 32,
+                       name: str = "engine") -> Trace:
+        """Re-record this run's arrival stream as a replayable `Trace`
+        (per-interval submit counts on the engine-step clock).  Save it
+        with `workloads.save_trace` and the same traffic replays — through
+        this engine, the simulator, or the benches — via
+        ``scenario="trace"``."""
+        horizon = float(max([self.steps, 1]
+                            + [s + 1 for s in self.arrival_log]))
+        return trace_from_arrivals(self.arrival_log, num_intervals,
+                                   name=name, horizon=horizon)
 
     # -- scheduling ----------------------------------------------------------
     def _route_arrivals(self) -> None:

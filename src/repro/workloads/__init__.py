@@ -1,8 +1,13 @@
-"""Scenario subsystem: declarative time-varying workloads and fault
-injection, consumed by the simulator (compiled `Schedule`), the serving
-engine / data pipeline / benches (`HostPlayback`), and the drift study.
-See `repro.workloads.scenario` for the model and `repro.workloads.library`
-for the built-in scenarios.
+"""Scenario subsystem: declarative time-varying workloads, fault
+injection, and trace-driven replay.
+
+Consumed by the simulator (compiled `Schedule`), the serving engine /
+data pipeline / benches (`HostPlayback`), and the drift study.  See
+`repro.workloads.scenario` for the model, `repro.workloads.library` for
+the built-in synthetic scenarios, and `repro.workloads.trace` for
+recorded-trace replay (trace schema, JSONL/CSV loader, change-point
+compiler, synthetic generator, and the export hook that re-records live
+runs as replayable traces).
 """
 
 from repro.workloads.scenario import (  # noqa: F401
@@ -16,9 +21,22 @@ from repro.workloads.scenario import (  # noqa: F401
     arrival_steps,
     available_scenarios,
     compile_schedule,
+    first_doc_line,
     host_playback,
     make_scenario,
     mean_lam_mult_over,
     register_scenario,
+    scenario_descriptions,
     slot_knobs,
+)
+from repro.workloads.trace import (  # noqa: F401
+    Incident,
+    Trace,
+    bundled_traces,
+    load_bundled,
+    load_trace,
+    save_trace,
+    synthesize_trace,
+    trace_from_arrivals,
+    trace_to_scenario,
 )

@@ -31,10 +31,16 @@ One scenario object feeds every layer through two projections:
 Scenarios are registered by name with `@register_scenario` (mirroring the
 `@register_policy` registry in `core/policy.py`) so every driver —
 `sweep()`, `run_study()`, `drift_study()`, `bench_serving`, the data
-pipeline — selects them by string.  The ``"static"`` scenario is the
-identity: compiled, it multiplies every knob by 1.0, and the simulator
-reproduces the pre-scenario sample paths bitwise (common random numbers
-preserved; pinned by tests/test_workloads.py).
+pipeline — selects them by string; `scenario_descriptions()` exposes a
+one-line description per entry (surfaced by ``benchmarks/run.py --help``).
+The ``"static"`` scenario is the identity: compiled, it multiplies every
+knob by 1.0, and the simulator reproduces the pre-scenario sample paths
+bitwise (common random numbers preserved; pinned by
+tests/test_workloads.py).  Synthetic scenarios live in
+`repro.workloads.library`; *recorded* ones come from
+`repro.workloads.trace`, which compiles real cluster traces (per-interval
+arrival counts + incident windows) into this same representation
+(``scenario="trace"``).
 """
 
 from __future__ import annotations
@@ -46,6 +52,8 @@ from typing import (Any, Callable, Dict, Mapping, NamedTuple, Optional,
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.utils.doc import first_doc_line
 
 # ---------------------------------------------------------------------------
 # Declarative pieces
@@ -132,7 +140,7 @@ ScenarioLike = Union[str, ScenarioConfig, Scenario, None]
 # ---------------------------------------------------------------------------
 
 _SCENARIOS: Dict[str, Callable[..., Scenario]] = {}
-_BUILTIN_MODULES = ("repro.workloads.library",)
+_BUILTIN_MODULES = ("repro.workloads.library", "repro.workloads.trace")
 _builtins_loaded = False
 
 
@@ -160,6 +168,15 @@ def register_scenario(name: str):
 def available_scenarios() -> Tuple[str, ...]:
     _load_builtins()
     return tuple(sorted(_SCENARIOS))
+
+
+def scenario_descriptions() -> Dict[str, str]:
+    """``{name: one-line description}`` for every registered scenario,
+    taken from the first sentence of each builder's docstring — the
+    self-describing registry surface behind ``benchmarks/run.py --help``."""
+    _load_builtins()
+    return {name: first_doc_line(builder)
+            for name, builder in sorted(_SCENARIOS.items())}
 
 
 def make_scenario(spec: ScenarioLike, **options) -> Scenario:
@@ -267,12 +284,26 @@ def slot_knobs(sched: Schedule, t: jnp.ndarray) -> SlotKnobs:
 def mean_lam_mult_over(sched: Schedule, start_slot: int,
                        horizon: int) -> float:
     """Exact time-average of lam_mult over slots [start_slot, horizon) —
-    the Little's-law denominator correction for the measurement window."""
-    knots = np.asarray(sched.knots)
+    the Little's-law denominator correction for the measurement window.
+
+    Computed from segment spans clipped to the window (O(S), not
+    O(window)), so a window that starts or ends mid-segment weighs that
+    truncated segment by exactly the slots it contributes.  Zero-length or
+    inverted windows raise instead of silently returning NaN, and a
+    negative ``start_slot`` raises instead of wrapping onto the final
+    segment (both were possible before these guards; pinned by
+    tests/test_workloads.py)."""
+    if not 0 <= start_slot < horizon:
+        raise ValueError(f"need 0 <= start_slot < horizon for a non-empty "
+                         f"window, got [{start_slot}, {horizon})")
+    knots = np.asarray(sched.knots, np.int64)
     lam = np.asarray(sched.lam_mult, np.float64)
-    seg = np.searchsorted(knots, np.arange(start_slot, horizon),
-                          side="right") - 1
-    return float(lam[seg].mean())
+    # Each segment runs [knot, next knot); the last extends to `horizon`
+    # (truncated there even if the scenario was compiled for a longer run).
+    ends = np.append(knots[1:], max(horizon, int(knots[-1]) + 1))
+    spans = (np.minimum(ends, horizon)
+             - np.maximum(knots, start_slot)).clip(min=0)
+    return float(np.dot(lam, spans) / spans.sum())
 
 
 # ---------------------------------------------------------------------------
@@ -347,6 +378,10 @@ def arrival_steps(playback: HostPlayback, n_requests: int,
     """
     if base_per_step <= 0:
         raise ValueError(f"base_per_step must be > 0, got {base_per_step}")
+    if n_requests < 0:
+        raise ValueError(f"n_requests must be >= 0, got {n_requests}")
+    if n_requests == 0:
+        return np.empty(0, np.int64)
     if float(playback.lam_mult.max()) <= 0.0:
         raise ValueError("scenario has lam_mult == 0 everywhere: no "
                          "arrivals would ever be emitted")

@@ -1,0 +1,260 @@
+"""Trace-driven replay: schema validation, JSONL/CSV round-trips,
+unit-mean normalization, change-point merging bounds, bitwise equality of
+a constant trace with the static scenario, the registered "trace"
+builder, the export hook, and the bundled reference traces."""
+
+import numpy as np
+import pytest
+
+from repro import workloads as wl
+from repro.core import locality as loc, robustness as rb, simulator as sim
+from repro.workloads.trace import (Incident, Trace, bundled_traces,
+                                   load_bundled, load_trace, save_trace,
+                                   synthesize_trace, trace_from_arrivals,
+                                   trace_to_scenario)
+
+CFG = sim.SimConfig(topo=loc.Topology(12, 4), true_rates=loc.Rates(),
+                    p_hot=0.5, max_arrivals=16, horizon=2000, warmup=500)
+CAP = loc.capacity_hot_rack(CFG.topo, CFG.true_rates, CFG.p_hot)
+EXACT = sim.make_estimates(CFG, "network", 0.0, -1)
+
+
+# ------------------------------------------------------------- schema -----
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        Trace("bad", 60.0, np.empty(0))  # empty
+    with pytest.raises(ValueError):
+        Trace("bad", 60.0, np.array([1.0, -2.0]))  # negative arrivals
+    with pytest.raises(ValueError):
+        Trace("bad", 0.0, np.ones(4))  # non-positive interval
+    with pytest.raises(ValueError):
+        Trace("bad", 60.0, np.ones(4), p_hot=np.array([0.5, 0.5]))  # shape
+    with pytest.raises(ValueError):
+        Trace("bad", 60.0, np.ones(4), p_hot=np.full(4, 1.5))  # range
+    with pytest.raises(ValueError):  # incident past the end
+        Trace("bad", 60.0, np.ones(4),
+              incidents=(Incident("straggler", 2, 9, servers=(0,)),))
+
+
+def test_incident_validation():
+    with pytest.raises(ValueError):
+        Incident("quake", 0, 4)  # unknown kind
+    with pytest.raises(ValueError):
+        Incident("straggler", 4, 4, servers=(0,))  # empty window
+    with pytest.raises(ValueError):
+        Incident("straggler", 0, 4)  # no servers
+    with pytest.raises(ValueError):
+        Incident("straggler", 0, 4, servers=(0,), factor=1.5)
+    with pytest.raises(ValueError):
+        Incident("rack_congestion", 0, 4, tier_mult=(1.0, 0.0, 1.0))
+
+
+# -------------------------------------------------------- round-trips ----
+
+@pytest.mark.parametrize("kind,suffix", [("diurnal_week", ".jsonl"),
+                                         ("flash_day", ".csv")])
+def test_save_load_roundtrip_is_lossless(tmp_path, kind, suffix):
+    t = synthesize_trace(kind)
+    path = tmp_path / f"t{suffix}"
+    save_trace(t, path)
+    r = load_trace(path)
+    assert r == t
+    # export -> load -> compile determinism: recompiling either object
+    # yields the identical Scenario
+    assert trace_to_scenario(r) == trace_to_scenario(t)
+    # and a second save/load cycle is a fixed point
+    save_trace(r, tmp_path / f"t2{suffix}")
+    assert load_trace(tmp_path / f"t2{suffix}") == r
+
+
+def test_csv_refuses_incidents(tmp_path):
+    t = synthesize_trace("diurnal_week")
+    with pytest.raises(ValueError):
+        save_trace(t, tmp_path / "t.csv")
+
+
+def test_jsonl_partial_annotation_rejected(tmp_path):
+    p = tmp_path / "t.jsonl"
+    p.write_text(
+        '{"record": "header", "version": 1, "name": "x", "interval": 60}\n'
+        '{"record": "interval", "arrivals": 3, "p_hot": 0.5}\n'
+        '{"record": "interval", "arrivals": 4}\n')
+    with pytest.raises(ValueError):
+        load_trace(p)
+
+
+def test_bundled_traces_pinned_to_generator():
+    """The checked-in example traces are the exact output of
+    `synthesize_trace` (seed 0) — regenerate them if this ever fails."""
+    assert bundled_traces() == ("diurnal_week", "flash_day")
+    for name in bundled_traces():
+        assert load_bundled(name) == synthesize_trace(name)
+    with pytest.raises(ValueError):
+        load_bundled("no_such_trace")
+
+
+# ----------------------------------------------------------- compiler ----
+
+def test_unit_mean_normalization():
+    rng = np.random.default_rng(1)
+    t = Trace("noisy", 60.0, rng.poisson(50.0, 700).astype(float))
+    scn = trace_to_scenario(t, max_segments=48)
+    assert scn.mean_lam_mult == pytest.approx(1.0, abs=1e-9)
+    raw = trace_to_scenario(t, max_segments=48, normalize=False)
+    assert raw.mean_lam_mult == pytest.approx(float(t.arrivals.mean()),
+                                              rel=1e-9)
+
+
+def test_change_point_merging_bound_on_long_trace():
+    rng = np.random.default_rng(2)
+    arr = rng.poisson(100 + 40 * np.sin(np.linspace(0, 20, 10_000)),
+                      10_000).astype(float)
+    scn = trace_to_scenario(Trace("big", 1.0, arr), max_segments=64)
+    assert 1 < len(scn.segments) <= 64
+    # merging preserves the time-average exactly (equal-length intervals)
+    assert scn.mean_lam_mult == pytest.approx(1.0, abs=1e-9)
+    # and the shape survives: compiled multipliers still span the sinusoid
+    lams = [s.lam_mult for s in scn.segments]
+    assert max(lams) - min(lams) > 0.4
+
+
+def test_aux_change_points_never_merge_away():
+    n = 100
+    t = Trace("inc", 60.0, np.full(n, 10.0),
+              incidents=(Incident("straggler", 40, 60, servers=(1,),
+                                  factor=0.5),
+                         Incident("rack_congestion", 50, 70,
+                                  tier_mult=(1.0, 0.7, 0.6))))
+    scn = trace_to_scenario(t, max_segments=8)
+    sched = wl.compile_schedule(scn, CFG.topo, horizon=n, base_p_hot=0.5)
+    import jax.numpy as jnp
+    r45 = np.asarray(wl.slot_knobs(sched, jnp.int32(45)).rate_mult)
+    r55 = np.asarray(wl.slot_knobs(sched, jnp.int32(55)).rate_mult)
+    r65 = np.asarray(wl.slot_knobs(sched, jnp.int32(65)).rate_mult)
+    r80 = np.asarray(wl.slot_knobs(sched, jnp.int32(80)).rate_mult)
+    assert r45[1, 0] == pytest.approx(0.5)      # straggler only
+    assert r45[0, 1] == pytest.approx(1.0)
+    assert r55[1, 1] == pytest.approx(0.5 * 0.7)  # overlap: both compose
+    assert r55[0, 2] == pytest.approx(0.6)
+    assert r65[1, 0] == pytest.approx(1.0)       # congestion only
+    assert r65[0, 1] == pytest.approx(0.7)
+    np.testing.assert_allclose(r80, 1.0)
+
+
+def test_unmergeable_annotations_raise():
+    n = 40
+    t = Trace("wild", 60.0, np.full(n, 5.0),
+              p_hot=np.linspace(0.1, 0.9, n))  # distinct every interval
+    with pytest.raises(ValueError, match="quantize"):
+        trace_to_scenario(t, max_segments=8)
+
+
+def test_constant_trace_matches_static_bitwise():
+    """Acceptance gate: a constant trace compiles to the static schedule
+    and reproduces its simulator sample paths bitwise."""
+    const = trace_to_scenario(Trace("const", 60.0, np.full(288, 12.0)))
+    assert len(const.segments) == 1
+    a = sim.simulate("balanced_pandas", CFG, 0.8 * CAP, EXACT, seed=3,
+                     scenario="static")
+    b = sim.simulate("balanced_pandas", CFG, 0.8 * CAP, EXACT, seed=3,
+                     scenario=const)
+    assert a == b
+
+
+# ----------------------------------------------------- registry + sim ----
+
+def test_trace_scenario_registered_and_options(tmp_path):
+    assert "trace" in wl.available_scenarios()
+    scn = wl.make_scenario("trace")  # default bundled diurnal week
+    assert scn.name == "trace:diurnal_week"
+    path = tmp_path / "mine.csv"
+    save_trace(Trace("mine", 30.0, np.arange(1.0, 25.0)), path)
+    by_path = wl.make_scenario("trace", path=path, max_segments=6)
+    assert by_path.name == "trace:mine"
+    assert 1 < len(by_path.segments) <= 6
+    with pytest.raises(ValueError):
+        wl.make_scenario("trace", path=path, name="flash_day")
+    with pytest.raises(FileNotFoundError):
+        wl.make_scenario("trace", path=tmp_path / "missing.jsonl")
+
+
+def test_simulate_and_drift_study_replay_trace():
+    out = sim.simulate("balanced_pandas", CFG, 0.6 * CAP, EXACT, seed=0,
+                       scenario=wl.ScenarioConfig("trace",
+                                                  {"name": "flash_day",
+                                                   "max_segments": 16}))
+    assert np.isfinite(out["mean_delay"])
+    assert out["throughput"] == pytest.approx(0.6 * CAP, rel=0.2)
+    cfg = rb.StudyConfig(
+        sim=sim.SimConfig(topo=loc.Topology(12, 4), true_rates=loc.Rates(),
+                          max_arrivals=16, horizon=600, warmup=200),
+        seeds=(0,))
+    scn = trace_to_scenario(load_bundled("flash_day"), max_segments=16)
+    study = rb.drift_study(cfg, scenarios={"replay": scn}, load=0.6)
+    assert set(study["delay"]) == {"replay"}
+    for arm in ("fixed_prior", "blind_ewma"):
+        assert np.isfinite(study["delay"]["replay"][arm]).all()
+
+
+def test_pipeline_replays_trace_scenario():
+    """The data pipeline accepts a trace replay like any other scenario:
+    same deterministic tokens, finite virtual clock."""
+    from repro.data.pipeline import DataPipeline, PipelineConfig
+    kw = dict(num_hosts=8, hosts_per_pod=4, num_chunks=32,
+              tokens_per_chunk=4096, seq_len=128, global_batch=2)
+    static = DataPipeline(PipelineConfig(**kw))
+    replay = DataPipeline(PipelineConfig(
+        scenario=wl.ScenarioConfig("trace", {"name": "flash_day",
+                                             "max_segments": 16}),
+        scenario_horizon=64.0, **kw))
+    b0, b1 = next(static), next(replay)
+    np.testing.assert_array_equal(b0["tokens"], b1["tokens"])
+    assert np.isfinite(replay.metrics["virtual_time"])
+
+
+def test_host_playback_replays_trace_incidents():
+    t = Trace("inc", 60.0, np.full(50, 4.0),
+              incidents=(Incident("straggler", 20, 30, servers=(2,),
+                                  factor=0.25),))
+    pb = wl.host_playback(trace_to_scenario(t), num_workers=4, horizon=100.0)
+    assert pb.slowdown(50.0, 2) == pytest.approx(4.0)   # inside window
+    assert pb.slowdown(10.0, 2) == pytest.approx(1.0)
+    steps = wl.arrival_steps(pb, 20, base_per_step=0.5)
+    assert len(steps) == 20 and (np.diff(steps) >= 0).all()
+
+
+# ---------------------------------------------------------- export hook ---
+
+def test_trace_from_arrivals_bins_exactly():
+    steps = np.array([0, 0, 3, 7, 7, 7, 12, 19])
+    t = trace_from_arrivals(steps, num_intervals=4, horizon=20.0,
+                            name="rec")
+    np.testing.assert_array_equal(t.arrivals, [3.0, 3.0, 1.0, 1.0])
+    assert t.interval == pytest.approx(5.0)
+    assert t.name == "rec"
+    empty = trace_from_arrivals([], num_intervals=3)
+    np.testing.assert_array_equal(empty.arrivals, [0.0, 0.0, 0.0])
+    with pytest.raises(ValueError):
+        trace_from_arrivals([5.0], num_intervals=2, horizon=4.0)
+    with pytest.raises(ValueError):
+        trace_from_arrivals([1.0], num_intervals=0)
+
+
+def test_export_replay_loop(tmp_path):
+    """record -> save -> load -> compile -> (deterministically) again."""
+    rng = np.random.default_rng(0)
+    steps = np.sort(rng.integers(0, 400, 200))
+    rec = trace_from_arrivals(steps, num_intervals=40, horizon=400.0)
+    p = tmp_path / "rec.jsonl"
+    save_trace(rec, p)
+    back = load_trace(p)
+    assert back == rec
+    s1 = trace_to_scenario(back, max_segments=16)
+    s2 = trace_to_scenario(load_trace(p), max_segments=16)
+    assert s1 == s2
+    out = sim.simulate("balanced_pandas", CFG, 0.6 * CAP, EXACT, seed=1,
+                       scenario=s1)
+    again = sim.simulate("balanced_pandas", CFG, 0.6 * CAP, EXACT, seed=1,
+                         scenario=s2)
+    assert out == again

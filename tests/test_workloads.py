@@ -217,6 +217,46 @@ def test_host_playback_straggler_slowdown():
     assert pb.slowdown(10.0, 1) == pytest.approx(1.0)
 
 
+def test_mean_lam_mult_over_window_edge_cases():
+    """Regressions for the measurement-window helper: zero-length and
+    inverted windows raise (they used to return NaN), negative start
+    raises (it used to wrap onto the final segment), and windows that
+    start or end mid-segment weigh the truncated segment exactly."""
+    scn = wl.make_scenario("flash_crowd", peak=2.0, start=0.4, width=0.2)
+    sched = wl.compile_schedule(scn, CFG.topo, horizon=1000, base_p_hot=0.5)
+    base = 1.0 / (1.0 - 0.2 + 2.0 * 0.2)
+    with pytest.raises(ValueError):
+        wl.mean_lam_mult_over(sched, 1000, 1000)  # zero-length
+    with pytest.raises(ValueError):
+        wl.mean_lam_mult_over(sched, 800, 400)    # inverted
+    with pytest.raises(ValueError):
+        wl.mean_lam_mult_over(sched, -5, 1000)    # negative start
+    # window truncating the final segment: one slot, pure base rate
+    assert wl.mean_lam_mult_over(sched, 999, 1000) == pytest.approx(base)
+    # window starting mid-surge: 100 surge slots + 300 base slots
+    want = (100 * 2.0 * base + 300 * base) / 400
+    assert wl.mean_lam_mult_over(sched, 500, 900) == pytest.approx(want)
+    # whole-run average matches the declarative mean exactly
+    assert wl.mean_lam_mult_over(sched, 0, 1000) == pytest.approx(1.0)
+    # agreement with the O(window) per-slot gather it replaced
+    per_slot = np.asarray([float(wl.slot_knobs(sched, jnp.int32(t)).lam_mult)
+                           for t in range(250, 700)]).mean()
+    assert wl.mean_lam_mult_over(sched, 250, 700) == pytest.approx(per_slot)
+
+
+def test_arrival_steps_zero_requests():
+    """Regression: n_requests == 0 returns an empty plan (and negative
+    counts raise) instead of tripping numpy internals."""
+    pb = wl.host_playback(wl.make_scenario("static"), num_workers=2,
+                          horizon=10.0)
+    steps = wl.arrival_steps(pb, 0, base_per_step=0.5)
+    assert steps.shape == (0,) and steps.dtype == np.int64
+    with pytest.raises(ValueError):
+        wl.arrival_steps(pb, -1, base_per_step=0.5)
+    with pytest.raises(ValueError):
+        wl.arrival_steps(pb, 4, base_per_step=0.0)
+
+
 def test_arrival_steps_follow_intensity():
     scn = wl.make_scenario("flash_crowd", peak=3.0, start=0.5, width=0.3)
     pb = wl.host_playback(scn, num_workers=4, horizon=100.0)

@@ -1,0 +1,66 @@
+"""Execute every fenced ``python`` code block in README.md and docs/*.md.
+
+The docs promise their snippets run; this script keeps the promise
+enforceable in CI (the `docs` job) and locally:
+
+    PYTHONPATH=src python tools/check_doc_snippets.py [files...]
+
+Each block executes in its own namespace with the repo root on sys.path
+(so `benchmarks`/`examples` imports work like they do for a user in a
+checkout).  Blocks fenced as anything other than ``python`` (e.g.
+``bash``, ``text``) are ignored.  Exit status is the number of failing
+blocks.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def blocks(path: Path):
+    """Yield (first_line_number, source) for each ```python fence."""
+    lang, start, buf = None, 0, []
+    for ln, line in enumerate(path.read_text().splitlines(), 1):
+        m = FENCE.match(line.strip())
+        if m and lang is None:
+            lang, start, buf = m.group(1) or "text", ln + 1, []
+        elif m:
+            if lang == "python":
+                yield start, "\n".join(buf)
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+    if lang is not None:
+        # an unterminated fence must fail loudly, not vanish from the run
+        raise SystemExit(f"{path}:{start - 1}: ```{lang} fence never closed")
+
+
+def main(argv) -> int:
+    targets = [Path(a) for a in argv] or \
+        [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    sys.path.insert(0, str(ROOT))
+    failures = 0
+    for path in targets:
+        for ln, src in blocks(path):
+            where = f"{path.relative_to(ROOT)}:{ln}"
+            try:
+                exec(compile(src, where, "exec"), {"__name__": "snippet"})
+            except Exception:
+                failures += 1
+                print(f"FAIL {where}", file=sys.stderr)
+                traceback.print_exc()
+            else:
+                print(f"ok   {where}")
+    print(f"{failures} failing snippet(s)" if failures
+          else "all doc snippets ran")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
