@@ -1,0 +1,61 @@
+"""Simulator throughput bench: slots/sec per policy, 3-tier vs 4-tier.
+
+The tier-generic refactor makes the tier count a parameter of every hot
+path (policy state shapes, kernel tier derivation, schedule compilation),
+so this bench tracks what that generality costs: for each registered
+policy, the wall-clock rate (simulated slots per second, compile time
+excluded) of one jit-compiled run on the classic flat-rack topology and
+on a 4-tier pod topology of the same fleet size.
+
+Rows come back in the orchestrator's ``(name, value, derived)`` format;
+``benchmarks/run.py --json`` additionally serializes them into the
+machine-readable perf record CI uploads (the bench trajectory's seed).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timed(run, args) -> float:
+    import jax
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(*args))
+    return time.perf_counter() - t0
+
+
+def bench(fast: bool = True):
+    import jax
+    from repro.core import locality as loc, simulator as sim
+    from repro.core.policy import PolicyConfig, available_policies
+
+    horizon = 2_000 if fast else 20_000
+    grids = (
+        ("3tier", loc.Topology(24, 6), loc.Rates()),
+        ("4tier", loc.Topology(24, (6, 12)), loc.Rates((0.5, 0.45, 0.35,
+                                                        0.25))),
+    )
+    rows = []
+    for label, topo, rates in grids:
+        cfg = sim.SimConfig(topo=topo, true_rates=rates, p_hot=0.5,
+                            max_arrivals=24, horizon=horizon,
+                            warmup=horizon // 4)
+        cap = loc.capacity_hot_rack(topo, rates, cfg.p_hot)
+        est = sim.make_estimates(cfg, "network", 0.0, -1)
+        for name in available_policies():
+            policy = PolicyConfig(name, {"prior": rates.values}) \
+                if name == "blind_pandas" else name
+            run = jax.jit(sim._build_run(policy, cfg))
+            args = (np.float32(0.8 * cap), est.astype(np.float32),
+                    np.uint32(0))
+            jax.block_until_ready(run(*args))  # compile
+            # min-of-3: a single sample is dominated by run-to-run noise,
+            # which would drown any real regression in the CI trajectory
+            dt = min(_timed(run, args) for _ in range(3))
+            rows.append((f"sim_slots_per_sec_{name}_{label}",
+                         horizon / dt,
+                         f"policy={name},topology={label},K={topo.num_tiers},"
+                         f"M={topo.num_servers},horizon={horizon}"))
+    return rows

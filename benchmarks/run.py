@@ -48,13 +48,18 @@ def main() -> None:
                     help="paper-scale horizons (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig34,fig56,drift,kernels,"
-                         "serving,serving_scenarios,trace_replay,roofline")
+                         "sim_throughput,serving,serving_scenarios,"
+                         "trace_replay,roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="additionally write every bench row as a "
+                         "machine-readable JSON perf record (the artifact "
+                         "CI uploads, e.g. BENCH_sim.json)")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import bench_kernels, bench_roofline, bench_serving
-    from benchmarks import figures
+    from benchmarks import bench_sim, figures
 
     outdir = Path("experiments/figures")
     outdir.mkdir(parents=True, exist_ok=True)
@@ -88,6 +93,7 @@ def main() -> None:
     section("fig56", lambda: figures.fig56_over(fast))
     section("drift", lambda: figures.fig_drift(fast))
     section("kernels", lambda: bench_kernels.bench(fast))
+    section("sim_throughput", lambda: bench_sim.bench(fast))
     section("serving", lambda: bench_serving.bench(fast))
     section("serving_scenarios", lambda: bench_serving.bench_scenarios(fast))
     section("trace_replay", lambda: bench_serving.replay_trace(
@@ -105,6 +111,25 @@ def main() -> None:
             csv_rows.append((f"claim_{k}", 1.0 if v else 0.0, str(v)))
         print(f"# wrote {outdir / 'figures.csv'} ({len(fig_rows)} rows); "
               f"claims: {claims}", file=sys.stderr)
+
+    if args.json:
+        import json
+        import platform
+        record = {
+            "schema": 1,
+            "suite": "benchmarks.run",
+            "full": bool(args.full),
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "records": [{"name": name, "value": float(val),
+                         "derived": str(derived)}
+                        for name, val, derived in csv_rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(csv_rows)} records)",
+              file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:

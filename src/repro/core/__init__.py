@@ -9,6 +9,7 @@ routers.
 
 from repro.core.locality import (  # noqa: F401
     LOCAL, RACK_LOCAL, REMOTE, Rates, Topology, Traffic, capacity_hot_rack,
+    pair_tiers, server_tiers, tier_masks,
 )
 from repro.core.policy import (  # noqa: F401
     Claim, Decision, PolicyConfig, Router, SlotPolicy,

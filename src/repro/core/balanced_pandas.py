@@ -1,23 +1,27 @@
 """Balanced-PANDAS (paper §3.2; Xie et al. 2016, Yekkehkhany et al. 2018).
 
-Queueing structure: three queues per server, (Q^l, Q^k, Q^r) for tasks that
-are local / rack-local / remote *to that server*.  Workload
+Queueing structure: K queues per server — one per locality tier, stored as
+one (M, K) matrix ``q`` (column k holds tasks at tier k *to that server*;
+the classic 3-tier instance is columns (local, rack-local, remote)).
+Workload
 
-    W_m = Q^l_m / alpha + Q^k_m / beta + Q^r_m / gamma.
+    W_m = sum_k  q[m, k] / rates[m, k].
 
 Routing: a type-``L`` arrival joins the queue of
 
-    argmin_m  W_m / (alpha*1{m local} + beta*1{m rack-local} + gamma*1{else})
+    argmin_m  W_m / rate(m, L)
 
-with random tie-breaking.  Scheduling: an idle server serves its own local
-queue first, then rack-local, then remote (and the class of the queue a task
-sits in is, by construction, its true service class — PANDAS dynamics here
-are exact, unlike the (m,n)-proxy needed for JSQ-MW).
+where ``rate(m, L)`` is the estimated rate at server m's tier for the
+task, with random tie-breaking.  Scheduling: an idle server serves its
+fastest-tier nonempty queue first (local > rack-local > ... > remote; the
+class of the queue a task sits in is, by construction, its true service
+class — PANDAS dynamics here are exact, unlike the (m,n)-proxy needed for
+JSQ-MW).
 
 Robustness experiment: the *scheduler* computes W and the routing rates with
-estimated rates ``est`` of shape (M, 3) — per-server (alpha^, beta^, gamma^),
-supporting per-tier and per-server error models — while the *service*
-dynamics use the true ``true3``.
+estimated rates ``est`` of shape (M, K) — per-server per-tier, supporting
+per-tier and per-server error models — while the *service* dynamics use the
+true rates.
 
 Scale-invariance note (beyond-paper analytical finding, see EXPERIMENTS.md):
 if every estimate is scaled by one constant c, W scales by 1/c and the
@@ -39,90 +43,96 @@ from repro.core.policy import SlotPolicy, register_policy
 
 
 class PandasState(NamedTuple):
-    q_local: jnp.ndarray   # (M,) int32 waiting local tasks
-    q_rack: jnp.ndarray    # (M,) int32 waiting rack-local tasks
-    q_remote: jnp.ndarray  # (M,) int32 waiting remote tasks
-    serving: jnp.ndarray   # (M,) int32 class in service (0 idle, 1/2/3)
+    q: jnp.ndarray        # (M, K) int32 waiting tasks per (server, tier)
+    serving: jnp.ndarray  # (M,) int32 class in service (0 idle, 1..K)
 
 
 def init_state(topo: loc.Topology) -> PandasState:
-    z = jnp.zeros((topo.num_servers,), jnp.int32)
-    return PandasState(z, z, z, z)
+    m, k = topo.num_servers, topo.num_tiers
+    return PandasState(jnp.zeros((m, k), jnp.int32),
+                       jnp.zeros((m,), jnp.int32))
 
 
 def num_in_system(s: PandasState) -> jnp.ndarray:
-    return (jnp.sum(s.q_local) + jnp.sum(s.q_rack) + jnp.sum(s.q_remote)
-            + jnp.sum(s.serving > 0))
+    return jnp.sum(s.q) + jnp.sum(s.serving > 0)
 
 
 def workload(s: PandasState, est: jnp.ndarray) -> jnp.ndarray:
     """(M,) estimated weighted workload W_m (waiting + in-service share).
 
-    est: (M, 3) per-server estimated (alpha^, beta^, gamma^).  The in-service
-    task contributes its expected residual 1/rate in the class it is being
+    est: (M, K) per-server estimated tier rates.  The in-service task
+    contributes its expected residual 1/rate in the class it is being
     served at, matching the paper's W definition over queue contents (queues
-    here exclude the in-service task, so we add it back).
+    here exclude the in-service task, so we add it back).  The tier sum is
+    accumulated left-associatively so the K=3 instance is bit-identical to
+    the pre-refactor (q_local, q_rack, q_remote) formulation.
     """
-    w = (s.q_local / est[:, 0] + s.q_rack / est[:, 1] + s.q_remote / est[:, 2])
+    k = s.q.shape[1]
+    w = s.q[:, 0] / est[:, 0]
+    for t in range(1, k):
+        w = w + s.q[:, t] / est[:, t]
     resid_rate = jnp.take_along_axis(
-        est, jnp.clip(s.serving - 1, 0, 2)[:, None], axis=1)[:, 0]
+        est, jnp.clip(s.serving - 1, 0, k - 1)[:, None], axis=1)[:, 0]
     return w + jnp.where(s.serving > 0, 1.0 / resid_rate, 0.0)
+
+
+def push_task(s: PandasState, m_star: jnp.ndarray, tier_m: jnp.ndarray,
+              active: jnp.ndarray) -> PandasState:
+    """Enqueue one (possibly inactive) arrival at server `m_star`, whose
+    tier for this task is ``tier_m[m_star]``."""
+    inc = active.astype(jnp.int32)
+    return PandasState(
+        q=s.q.at[m_star, tier_m[m_star]].add(inc),
+        serving=s.serving,
+    )
 
 
 def route_one(s: PandasState, key: jax.Array, task: jnp.ndarray,
               active: jnp.ndarray, est: jnp.ndarray,
-              rack_of: jnp.ndarray) -> PandasState:
+              ancestors: jnp.ndarray) -> PandasState:
     """Route a single arrival against the live workloads (estimated rates).
 
     Tie-break: among minimal scores, prefer the faster tier (then random).
     The paper says "ties are broken randomly", but read literally that
-    routes ~(M-M_R)/M of arrivals REMOTE whenever workloads tie at 0 (any
-    idle fleet), which no real scheduler does and which inverts the Fig. 1
+    routes most arrivals REMOTE whenever workloads tie at 0 (any idle
+    fleet), which no real scheduler does and which inverts the Fig. 1
     ordering at sub-critical load — see EXPERIMENTS.md §Reproduction.  The
     infinitesimal rate preference only discriminates exact ties.
     """
-    local, rack = loc.locality_masks(task, rack_of)
-    est_rate = jnp.where(local, est[:, 0], jnp.where(rack, est[:, 1], est[:, 2]))
+    tier_m = loc.server_tiers(task, ancestors)  # (M,) tier of each server
+    est_rate = jnp.take_along_axis(est, tier_m[:, None], axis=1)[:, 0]
     score = workload(s, est) / est_rate - est_rate * 1e-6
     m_star = loc.random_argmin(key, score)
-    cls = jnp.where(local[m_star], loc.LOCAL,
-                    jnp.where(rack[m_star], loc.RACK_LOCAL, loc.REMOTE))
-    inc = active.astype(jnp.int32)
-    return PandasState(
-        q_local=s.q_local.at[m_star].add(inc * (cls == loc.LOCAL)),
-        q_rack=s.q_rack.at[m_star].add(inc * (cls == loc.RACK_LOCAL)),
-        q_remote=s.q_remote.at[m_star].add(inc * (cls == loc.REMOTE)),
-        serving=s.serving,
-    )
+    return push_task(s, m_star, tier_m, active)
 
 
 def service_completions(s: PandasState, k_serve: jax.Array,
                         true_rates: jnp.ndarray):
     """Bernoulli service completions at the *true* rates.
 
-    `true_rates` is the shared ``(3,)`` vector or a per-server ``(M, 3)``
+    `true_rates` is the shared ``(K,)`` vector or a per-server ``(M, K)``
     matrix (scenario fault injection).  Returns (done (M,) bool,
     completions int32) — the per-server mask is what the blind policy's
     estimator consumes.
     """
-    tm3 = loc.per_server_rates(true_rates, s.serving.shape[0])
-    done = jax.random.bernoulli(k_serve, claiming.tier_rates(s.serving, tm3))
+    tmk = loc.per_server_rates(true_rates, s.serving.shape[0])
+    done = jax.random.bernoulli(k_serve, claiming.tier_rates(s.serving, tmk))
     return done, jnp.sum(done).astype(jnp.int32)
 
 
 def schedule_idle(s: PandasState, done: jnp.ndarray) -> PandasState:
-    """Idle servers (post-completion) pick local > rack-local > remote
-    (conflict-free)."""
+    """Idle servers (post-completion) pick their fastest nonempty tier
+    queue (local > rack-local > ... > remote, conflict-free)."""
+    k = s.q.shape[1]
     serving = jnp.where(done, 0, s.serving)
-    next_cls = jnp.where(s.q_local > 0, loc.LOCAL,
-                         jnp.where(s.q_rack > 0, loc.RACK_LOCAL,
-                                   jnp.where(s.q_remote > 0, loc.REMOTE, 0)))
-    take = (serving == 0) & (next_cls > 0)
+    nonempty = s.q > 0                              # (M, K)
+    first = jnp.argmax(nonempty, axis=1)            # fastest nonempty tier
+    has_task = jnp.any(nonempty, axis=1)
+    take = (serving == 0) & has_task
+    dec = take[:, None] & (jnp.arange(k)[None, :] == first[:, None])
     return PandasState(
-        q_local=s.q_local - (take & (next_cls == loc.LOCAL)),
-        q_rack=s.q_rack - (take & (next_cls == loc.RACK_LOCAL)),
-        q_remote=s.q_remote - (take & (next_cls == loc.REMOTE)),
-        serving=jnp.where(take, next_cls, serving).astype(jnp.int32),
+        q=s.q - dec.astype(jnp.int32),
+        serving=jnp.where(take, first + 1, serving).astype(jnp.int32),
     )
 
 
@@ -140,18 +150,19 @@ def serve_and_schedule(s: PandasState, k_serve: jax.Array,
 
 def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
               active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
-              rack_of: jnp.ndarray):
+              ancestors: jnp.ndarray):
     """One time slot: arrivals -> service completions -> scheduling.
 
     Returns (state, completions_this_slot).
     """
+    anc = loc.as_ancestors(ancestors)
     k_route, k_serve = jax.random.split(key)
     n_arr = types.shape[0]
 
     # Sequential routing of the slot's arrivals (workloads update in-slot).
     def body(i, st):
         return route_one(st, jax.random.fold_in(k_route, i), types[i],
-                         active[i], est, rack_of)
+                         active[i], est, anc)
     s = jax.lax.fori_loop(0, n_arr, body, s)
 
     return serve_and_schedule(s, k_serve, true_rates)
@@ -162,8 +173,8 @@ class BalancedPandasPolicy(SlotPolicy):
     """Balanced-PANDAS: weighted-workload routing over estimated per-tier
     rates — the paper's headline throughput- and heavy-traffic-optimal
     policy.  Arrivals go to the server minimizing workload W / rate over
-    local / rack-local / remote tiers; robust to rate mis-estimation
-    (paper §4) and the reference point every other arm is compared to.
+    the K locality tiers; robust to rate mis-estimation (paper §4) and
+    the reference point every other arm is compared to.
     """
 
     name = "balanced_pandas"
@@ -171,8 +182,8 @@ class BalancedPandasPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> PandasState:
         return init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
-        return slot_step(s, key, types, active, est, true_rates, rack_of)
+    def slot_step(self, s, key, types, active, est, true_rates, ancestors):
+        return slot_step(s, key, types, active, est, true_rates, ancestors)
 
     def num_in_system(self, s: PandasState) -> jnp.ndarray:
         return num_in_system(s)

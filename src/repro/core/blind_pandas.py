@@ -15,6 +15,10 @@ fixed prior — even one exactly right at t=0 — goes stale, while the blind
 EWMA tracks the drift.  The estimate floor keeps routing finite while a
 (server, tier) pair is unobserved; like the host estimator, the service
 TIME is EWMA'd and inverted on read (1/E[T] is the consistent estimator).
+
+The prior is a strictly-decreasing K-vector matching the topology's tier
+count (checked at `init_state`); the classic 3-tier default is
+``(0.5, 0.45, 0.25)``.
 """
 
 from __future__ import annotations
@@ -33,7 +37,7 @@ from repro.core.policy import SlotPolicy, register_policy
 class BlindPandasState(NamedTuple):
     core: bp.PandasState
     age: jnp.ndarray   # (M,) int32 completed slots of the in-service task
-    tbar: jnp.ndarray  # (M, 3) f32 EWMA'd service time per (server, tier)
+    tbar: jnp.ndarray  # (M, K) f32 EWMA'd service time per (server, tier)
 
 
 @register_policy
@@ -42,7 +46,7 @@ class BlindPandasPolicy(SlotPolicy):
     per-(server, tier) EWMA rate estimates inside the scan state,
     re-learning online when the true rates drift.
 
-    Options: ``prior`` — (alpha0, beta0, gamma0) the estimates start from;
+    Options: ``prior`` — the (K,) tier rates the estimates start from;
     ``decay`` — EWMA decay per observation; ``floor`` — lower clamp on the
     read-side rate estimates.  Travel in
     ``PolicyConfig("blind_pandas", {"prior": (...), ...})``.
@@ -53,27 +57,32 @@ class BlindPandasPolicy(SlotPolicy):
     def __init__(self, prior: Sequence[float] = (0.5, 0.45, 0.25),
                  decay: float = 0.98, floor: float = 1e-3):
         prior = tuple(float(p) for p in prior)
-        if len(prior) != 3 or any(not 0.0 < p <= 1.0 for p in prior):
-            raise ValueError(f"prior must be 3 rates in (0, 1], got {prior}")
+        if len(prior) < 2 or any(not 0.0 < p <= 1.0 for p in prior):
+            raise ValueError(f"prior must be >= 2 tier rates in (0, 1], "
+                             f"got {prior}")
         if not 0.0 < decay < 1.0:
             raise ValueError(f"decay must be in (0, 1), got {decay}")
-        self.prior: Tuple[float, float, float] = prior
+        self.prior: Tuple[float, ...] = prior
         self.decay = decay
         self.floor = floor
 
     def init_state(self, topo: loc.Topology, **opts) -> BlindPandasState:
         m = topo.num_servers
+        if len(self.prior) != topo.num_tiers:
+            raise ValueError(f"prior has {len(self.prior)} tiers but the "
+                             f"topology has {topo.num_tiers}")
         tbar = jnp.tile(1.0 / jnp.asarray(self.prior, jnp.float32), (m, 1))
         return BlindPandasState(core=bp.init_state(topo),
                                 age=jnp.zeros((m,), jnp.int32), tbar=tbar)
 
     def estimates(self, s: BlindPandasState) -> jnp.ndarray:
-        """(M, 3) current rate estimates the routing decisions use."""
+        """(M, K) current rate estimates the routing decisions use."""
         return jnp.clip(1.0 / jnp.maximum(s.tbar, 1e-9), self.floor, 1.0)
 
     def slot_step(self, s: BlindPandasState, key, types, active, est,
-                  true_rates, rack_of):
+                  true_rates, ancestors):
         del est  # blind: the policy trusts only its own observations
+        anc = loc.as_ancestors(ancestors)
         my_est = self.estimates(s)
         k_route, k_serve = jax.random.split(key)
         n_arr = types.shape[0]
@@ -82,7 +91,7 @@ class BlindPandasPolicy(SlotPolicy):
 
         def body(i, st):
             return bp.route_one(st, jax.random.fold_in(k_route, i), types[i],
-                                active[i], my_est, rack_of)
+                                active[i], my_est, anc)
         core = jax.lax.fori_loop(0, n_arr, body, core)
 
         # Exactly balanced_pandas's service/scheduling dynamics, via the
@@ -90,7 +99,8 @@ class BlindPandasPolicy(SlotPolicy):
         done, completions = bp.service_completions(core, k_serve, true_rates)
 
         # Observe: a task completing this slot took age+1 slots of service.
-        tier = jnp.clip(core.serving - 1, 0, 2)
+        k = s.tbar.shape[1]
+        tier = jnp.clip(core.serving - 1, 0, k - 1)
         tbar = ewma_time_update(s.tbar, done, tier,
                                 (s.age + 1).astype(jnp.float32), self.decay)
 

@@ -5,6 +5,10 @@ a random order each slot, for fairness) and letting each idle server claim
 the head task of some queue chosen by a policy-specific score.  Claims within
 a slot must be sequential so two servers cannot take the same last task; the
 loop carries the live queue vector.
+
+All tier logic derives from the `core/locality.py` seam, so these helpers
+are K-generic: they accept a (depth, M) ancestor table (or the legacy (M,)
+rack map, normalized through `loc.as_ancestors`).
 """
 
 from __future__ import annotations
@@ -19,7 +23,7 @@ from repro.core import locality as loc
 
 def claim_loop(
     q: jnp.ndarray,                 # (M,) int32 waiting tasks per queue
-    serving_tier: jnp.ndarray,      # (M,) int32; 0 == idle, else class 1..3
+    serving_tier: jnp.ndarray,      # (M,) int32; 0 == idle, else class 1..K
     key: jax.Array,
     score_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
     tier_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
@@ -27,11 +31,11 @@ def claim_loop(
     """Each idle server m claims argmax_n score_fn(m, q) among nonempty queues.
 
     score_fn(m, q) -> (M,) float scores; entries for empty queues are masked
-    here.  tier_fn(m, n) -> int32 service class (LOCAL/RACK_LOCAL/REMOTE)
-    once m starts n's head task.  The CLASS is stored, not the numeric
-    rate: the caller re-derives the rate from the current true rates every
-    slot, so scenario fault injection (stragglers, congestion windows)
-    applies to in-flight tasks too — matching the PANDAS-family dynamics.
+    here.  tier_fn(m, n) -> int32 service class (1..K) once m starts n's
+    head task.  The CLASS is stored, not the numeric rate: the caller
+    re-derives the rate from the current true rates every slot, so scenario
+    fault injection (stragglers, congestion windows) applies to in-flight
+    tasks too — matching the PANDAS-family dynamics.
     Returns (q, serving_tier).
     """
     m_total = q.shape[0]
@@ -55,21 +59,21 @@ def claim_loop(
 
 
 def pair_tier(m: jnp.ndarray, n: jnp.ndarray,
-              rack_of: jnp.ndarray) -> jnp.ndarray:
-    """(m,n)-relation service class: LOCAL if m == n, RACK_LOCAL if same
-    rack, else REMOTE — the tier analogue of `loc.pair_rate`, shared by the
-    claim-based policies (JSQ-MaxWeight, Priority)."""
-    return jnp.where(m == n, loc.LOCAL,
-                     jnp.where(rack_of[m] == rack_of[n],
-                               loc.RACK_LOCAL, loc.REMOTE))
+              ancestors: jnp.ndarray) -> jnp.ndarray:
+    """(m,n)-relation service class 1..K: LOCAL if m == n, then one class
+    per shared hierarchy level, REMOTE otherwise — the class analogue of
+    `loc.pair_rate`, shared by the claim-based policies (JSQ-MaxWeight,
+    Priority).  `ancestors` is a (depth, M) table or legacy (M,) rack map."""
+    return (loc.pair_tiers(m, n, ancestors) + 1).astype(jnp.int32)
 
 
-def tier_rates(serving_tier: jnp.ndarray, tm3: jnp.ndarray) -> jnp.ndarray:
-    """(M,) current true service rate per server: row m of tm3 at the
-    in-service class, 0 where idle.  Looked up fresh each slot so the rate
-    tracks the scenario's per-slot true-rate multipliers."""
+def tier_rates(serving_tier: jnp.ndarray, tmk: jnp.ndarray) -> jnp.ndarray:
+    """(M,) current true service rate per server: row m of the (M, K) true
+    rates at the in-service class, 0 where idle.  Looked up fresh each slot
+    so the rate tracks the scenario's per-slot true-rate multipliers."""
+    k = tmk.shape[1]
     rate = jnp.take_along_axis(
-        tm3, jnp.clip(serving_tier - 1, 0, 2)[:, None], axis=1)[:, 0]
+        tmk, jnp.clip(serving_tier - 1, 0, k - 1)[:, None], axis=1)[:, 0]
     return jnp.where(serving_tier > 0, rate, 0.0)
 
 

@@ -4,8 +4,11 @@ pipeline.
 
 "Servers" here are abstract workers (model-replica groups, data hosts,
 pipeline stages); "tasks" carry a set of local workers (where their
-prefix-KV / data chunk lives).  Locality tiers: local (on-worker), rack-local
-(same pod, ICI transfer), remote (cross-pod, DCN transfer).
+prefix-KV / data chunk lives).  The fleet layout is the same
+`locality.Topology` the JAX simulator uses — the old host-only
+``ClusterSpec`` is retired (a thin alias remains) — so locality tiers are
+K-generic: local (on-worker), one tier per hierarchy level (same rack /
+same pod: ICI transfer), remote (cross-pod, DCN transfer).
 
 Every router subclasses `repro.core.policy.Router` and speaks the uniform
 ``route(locals_) -> Decision`` / ``claim(worker) -> Claim | None`` surface,
@@ -18,24 +21,54 @@ sources its rates from `EwmaRateEstimator` (blind mode) or fixed priors.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.locality import Topology
 from repro.core.policy import Claim, Decision, Router, register_router
 
+def ClusterSpec(num_workers: int, workers_per_pod: int) -> Topology:
+    """Retired host-side fleet spec, kept as a constructor shim: the
+    unified `Topology` replaces it everywhere and validates what
+    ClusterSpec never did (group sizes must tile ``num_workers``; a
+    20-worker fleet in pods of 8 used to silently mis-assign pods)."""
+    return Topology(num_workers, workers_per_pod)
 
-@dataclasses.dataclass(frozen=True)
-class ClusterSpec:
-    """Worker fleet layout: `num_workers` workers in pods of `workers_per_pod`."""
 
-    num_workers: int
-    workers_per_pod: int
+def worker_tiers(spec: Topology, locals_: Sequence[int]) -> np.ndarray:
+    """(M,) tier index (0 local .. K-1 remote) of each worker for a task
+    whose data lives on `locals_` — the host-side `server_tiers`."""
+    anc = np.asarray(spec.ancestors)
+    locals_ = list(locals_)
+    tier = np.full(spec.num_workers, spec.num_tiers - 1, np.int64)
+    for lvl in range(anc.shape[0] - 1, -1, -1):
+        tier[np.isin(anc[lvl], anc[lvl][locals_])] = lvl + 1
+    tier[locals_] = 0
+    return tier
 
-    @property
-    def pod_of(self) -> np.ndarray:
-        return np.arange(self.num_workers) // self.workers_per_pod
+
+def pair_worker_tiers(spec: Topology, worker: int) -> np.ndarray:
+    """(M,) pair tier of every worker n w.r.t. `worker` (0 if n == worker,
+    else 1 + deepest shared level, else K-1) — the host-side
+    `locality.pair_tiers`."""
+    anc = np.asarray(spec.ancestors)
+    tier = np.full(spec.num_workers, spec.num_tiers - 1, np.int64)
+    for lvl in range(anc.shape[0] - 1, -1, -1):
+        tier[anc[lvl] == anc[lvl, worker]] = lvl + 1
+    tier[worker] = 0
+    return tier
+
+
+def tier_of(spec: Topology, locals_: Sequence[int], worker: int) -> int:
+    """Tier index (0 local .. K-1 remote) of one worker — shared helper."""
+    if worker in set(locals_):
+        return 0
+    anc = np.asarray(spec.ancestors)
+    for lvl in range(anc.shape[0]):
+        if anc[lvl, worker] in set(int(a) for a in anc[lvl, list(locals_)]):
+            return lvl + 1
+    return spec.num_tiers - 1
 
 
 @register_router
@@ -47,19 +80,15 @@ class BalancedPandasRouter(Router):
 
     name = "balanced_pandas"
 
-    def __init__(self, spec: ClusterSpec, rates: Sequence[float],
+    def __init__(self, spec: Topology, rates: Sequence[float],
                  estimator=None, seed: int = 0):
         super().__init__(spec, rates, estimator=estimator, seed=seed)
-        self.q = np.zeros((spec.num_workers, 3), np.int64)  # per-tier queues
+        # one queue per (worker, tier)
+        self.q = np.zeros((spec.num_workers, self.num_tiers), np.int64)
 
     def tiers(self, locals_: Sequence[int]) -> np.ndarray:
-        """(M,) tier index (0 local / 1 rack-local / 2 remote) of each worker."""
-        m = self.spec.num_workers
-        tier = np.full(m, 2, np.int64)
-        local_pods = np.unique(self.pod_of[list(locals_)])
-        tier[np.isin(self.pod_of, local_pods)] = 1
-        tier[list(locals_)] = 0
-        return tier
+        """(M,) tier index of each worker for this task."""
+        return worker_tiers(self.spec, locals_)
 
     def workload(self) -> np.ndarray:
         est = self._est()
@@ -86,8 +115,8 @@ class BalancedPandasRouter(Router):
         return Decision(worker=m_star, tier=int(tier[m_star]))
 
     def claim(self, worker: int) -> Optional[Claim]:
-        """Idle worker serves its own queues, local > rack > remote."""
-        for t in range(3):
+        """Idle worker serves its own queues, fastest tier first."""
+        for t in range(self.num_tiers):
             if self.q[worker, t] > 0:
                 self.q[worker, t] -= 1
                 return Claim(source=worker, tier=t)
@@ -111,7 +140,7 @@ class PandasPoDRouter(BalancedPandasRouter):
 
     name = "pandas_po2"
 
-    def __init__(self, spec: ClusterSpec, rates: Sequence[float],
+    def __init__(self, spec: Topology, rates: Sequence[float],
                  estimator=None, seed: int = 0, d: int = 2):
         super().__init__(spec, rates, estimator=estimator, seed=seed)
         if d < 1:
@@ -123,12 +152,11 @@ class PandasPoDRouter(BalancedPandasRouter):
         locals_ = [int(x) for x in locals_]
         sampled = self.rng.choice(m, size=min(self.d, m), replace=False)
         cand = sorted(set(locals_) | {int(x) for x in sampled})
-        local_pods = {int(p) for p in self.pod_of[locals_]}
-        tier = np.array([0 if c in locals_
-                         else (1 if int(self.pod_of[c]) in local_pods else 2)
-                         for c in cand], np.int64)
-        # (C, 3) estimated rates for the candidates only — never the full
-        # (M, 3) matrix, or the O(d) claim would be O(M) in disguise.
+        # O(d * depth) tier derivation: never touch all M workers
+        tier = np.array([tier_of(self.spec, locals_, c) for c in cand],
+                        np.int64)
+        # (C, K) estimated rates for the candidates only — never the full
+        # (M, K) matrix, or the O(d) claim would be O(M) in disguise.
         est = (self.estimator.rates_for(cand) if self.estimator is not None
                else np.tile(self.prior, (len(cand), 1)))
         w = (self.q[cand] / est).sum(axis=1)
@@ -151,7 +179,7 @@ class JsqMaxWeightRouter(Router):
 
     name = "jsq_maxweight"
 
-    def __init__(self, spec: ClusterSpec, rates: Sequence[float],
+    def __init__(self, spec: Topology, rates: Sequence[float],
                  estimator=None, seed: int = 0):
         super().__init__(spec, rates, estimator=estimator, seed=seed)
         self.q = np.zeros(spec.num_workers, np.int64)
@@ -170,16 +198,13 @@ class JsqMaxWeightRouter(Router):
         from, or None."""
         if not (self.q > 0).any():
             return None
-        est = self._est()[worker]  # (3,)
-        w = np.where(np.arange(self.spec.num_workers) == worker, est[0],
-                     np.where(self.pod_of == self.pod_of[worker], est[1],
-                              est[2]))
+        est = self._est()[worker]  # (K,)
+        pair = pair_worker_tiers(self.spec, worker)
+        w = est[pair]
         score = np.where(self.q > 0, w * self.q, -np.inf)
         n_star = _rand_argmax(self.rng, score)
         self.q[n_star] -= 1
-        tier = 0 if n_star == worker else (
-            1 if self.pod_of[n_star] == self.pod_of[worker] else 2)
-        return Claim(source=int(n_star), tier=tier)
+        return Claim(source=int(n_star), tier=int(pair[n_star]))
 
     def queue_depths(self) -> np.ndarray:
         return self.q.copy()
@@ -197,7 +222,7 @@ class FifoRouter(Router):
 
     name = "fifo"
 
-    def __init__(self, spec: ClusterSpec, rates: Sequence[float],
+    def __init__(self, spec: Topology, rates: Sequence[float],
                  estimator=None, seed: int = 0):
         super().__init__(spec, rates, estimator=estimator, seed=seed)
         self.queue: List[List[int]] = []
@@ -211,15 +236,6 @@ class FifoRouter(Router):
             return None
         self.queue.pop(0)
         return Claim(source=-1, tier=-1)  # tier depends on the task itself
-
-
-def tier_of(spec: ClusterSpec, locals_: Sequence[int], worker: int) -> int:
-    """0 local / 1 rack(pod)-local / 2 remote — shared helper."""
-    if worker in set(locals_):
-        return 0
-    if spec.pod_of[worker] in set(spec.pod_of[list(locals_)]):
-        return 1
-    return 2
 
 
 def _rand_argmin(rng, x: np.ndarray) -> int:

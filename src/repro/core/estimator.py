@@ -39,8 +39,8 @@ def ewma_time_update(tbar: jnp.ndarray, done: jnp.ndarray, tier: jnp.ndarray,
                      decay: float = 0.98) -> jnp.ndarray:
     """Vectorized masked EWMA of the service TIME, one slot for all servers.
 
-    tbar: (M, 3) EWMA'd service time per (server, tier); done: (M,) bool
-    completion mask this slot; tier: (M,) int32 tier served (0/1/2);
+    tbar: (M, K) EWMA'd service time per (server, tier); done: (M,) bool
+    completion mask this slot; tier: (M,) int32 tier served (0..K-1);
     service_slots: (M,) f32 observed completion times.  Like the host-side
     `EwmaRateEstimator`, the TIME is averaged and inverted by the consumer
     (1/E[T] is the consistent rate estimator; E[1/T] is biased upward).
@@ -48,7 +48,8 @@ def ewma_time_update(tbar: jnp.ndarray, done: jnp.ndarray, tier: jnp.ndarray,
     `lax.scan` — fixed shapes, no scatter.
     """
     upd = decay * tbar + (1.0 - decay) * service_slots[:, None]
-    mask = done[:, None] & (jnp.arange(3)[None, :] == tier[:, None])
+    mask = done[:, None] & (jnp.arange(tbar.shape[1])[None, :]
+                            == tier[:, None])
     return jnp.where(mask, upd, tbar)
 
 
@@ -62,19 +63,24 @@ class EwmaRateEstimator:
     """
 
     num_servers: int
-    prior: np.ndarray  # (3,) prior rates (alpha, beta, gamma)
+    prior: np.ndarray  # (K,) prior tier rates (fastest first)
     decay: float = 0.98
     min_samples: int = 8
 
     def __post_init__(self):
         # EWMA the service TIME and invert: 1/E[T] is the consistent rate
         # estimator (E[1/T] diverges for exponential service).
-        self._time = np.tile(1.0 / np.asarray(self.prior, np.float64),
-                             (self.num_servers, 1))
-        self._count = np.zeros((self.num_servers, 3), np.int64)
+        self.prior = np.asarray(self.prior, np.float64)
+        self._time = np.tile(1.0 / self.prior, (self.num_servers, 1))
+        self._count = np.zeros((self.num_servers, self.prior.size), np.int64)
+
+    @property
+    def num_tiers(self) -> int:
+        return int(self.prior.size)
 
     def observe(self, server: int, tier: int, service_time: float) -> None:
-        """Record one completed task's service time (tier: 0 local/1 rack/2 remote)."""
+        """Record one completed task's service time (tier: 0 local ..
+        K-1 remote)."""
         self._time[server, tier] = (self.decay * self._time[server, tier]
                                     + (1.0 - self.decay)
                                     * max(service_time, 1e-9))

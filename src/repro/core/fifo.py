@@ -47,12 +47,13 @@ def num_in_system(s: FifoState) -> jnp.ndarray:
 
 def slot_step(s: FifoState, key: jax.Array, types: jnp.ndarray,
               active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
-              rack_of: jnp.ndarray):
+              ancestors: jnp.ndarray):
     del est  # FIFO consults nothing
+    anc = loc.as_ancestors(ancestors)
     cap = s.buf.shape[0]
     k_serve, k_perm = jax.random.split(key)
     n_arr = types.shape[0]
-    tm3 = loc.per_server_rates(true_rates, s.serving_tier.shape[0])
+    tmk = loc.per_server_rates(true_rates, s.serving_tier.shape[0])
 
     # 1. Push arrivals (drop when full).
     def push(i, st):
@@ -69,7 +70,7 @@ def slot_step(s: FifoState, key: jax.Array, types: jnp.ndarray,
 
     # 2. Service completions at the CURRENT true rates (class stored, rate
     #    re-derived each slot -> scenario drift reaches in-flight tasks).
-    done = jax.random.bernoulli(k_serve, tier_rates(s.serving_tier, tm3))
+    done = jax.random.bernoulli(k_serve, tier_rates(s.serving_tier, tmk))
     completions = jnp.sum(done).astype(jnp.int32)
     serving_tier = jnp.where(done, 0, s.serving_tier)
 
@@ -81,9 +82,7 @@ def slot_step(s: FifoState, key: jax.Array, types: jnp.ndarray,
         m = order[i]
         take = (serving_tier[m] == 0) & (count > 0)
         task = buf[head % cap]
-        local, rack = loc.locality_masks(task, rack_of)
-        tier = jnp.where(local[m], loc.LOCAL,
-                         jnp.where(rack[m], loc.RACK_LOCAL, loc.REMOTE))
+        tier = loc.server_tiers(task, anc)[m] + 1  # service class 1..K
         serving_tier = serving_tier.at[m].set(
             jnp.where(take, tier, serving_tier[m]).astype(jnp.int32))
         head = (head + take.astype(jnp.int32)) % cap
@@ -115,8 +114,8 @@ class FifoPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> FifoState:
         return init_state(topo, cap=self.cap)
 
-    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
-        return slot_step(s, key, types, active, est, true_rates, rack_of)
+    def slot_step(self, s, key, types, active, est, true_rates, ancestors):
+        return slot_step(s, key, types, active, est, true_rates, ancestors)
 
     def num_in_system(self, s: FifoState) -> jnp.ndarray:
         return num_in_system(s)

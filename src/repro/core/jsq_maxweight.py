@@ -4,11 +4,13 @@ One queue per server, holding tasks *local to that server*.  Routing: JSQ
 among the arrival's 3 local queues.  Scheduling: an idle server m serves the
 head task of
 
-    argmax_n (alpha*1{n=m} + beta*1{R(n)=R(m)} + gamma*1{else}) * Q_n(t)
+    argmax_n  rate(m, n) * Q_n(t)
 
-with random tie-breaking.  The weight uses the scheduler's *estimated* rates
-(robustness experiment); the realized service rate uses the true rates via
-the (m,n)-relation proxy (exact for n=m; see DESIGN.md §3).
+where ``rate(m, n)`` is the estimated rate of the (m, n) pair tier (K=3:
+alpha if n == m, beta if same rack, gamma otherwise) — tier-generic through
+the `core/locality.py` seam.  The weight uses the scheduler's *estimated*
+rates (robustness experiment); the realized service rate uses the true
+rates via the (m,n)-relation proxy (exact for n=m; see DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -38,12 +40,13 @@ def num_in_system(s: JsqMwState) -> jnp.ndarray:
 
 def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
               active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
-              rack_of: jnp.ndarray):
-    """est: (M, 3) per-server estimated rates; server m weighs queues with its
-    own estimates est[m].  true_rates: (3,) shared or (M, 3) per-server."""
+              ancestors: jnp.ndarray):
+    """est: (M, K) per-server estimated rates; server m weighs queues with its
+    own estimates est[m].  true_rates: (K,) shared or (M, K) per-server."""
+    anc = loc.as_ancestors(ancestors)
     k_route, k_serve, k_claim = jax.random.split(key, 3)
     n_arr = types.shape[0]
-    tm3 = loc.per_server_rates(true_rates, s.q.shape[0])
+    tmk = loc.per_server_rates(true_rates, s.q.shape[0])
 
     # 1. JSQ routing among each arrival's local servers.
     def body(i, q):
@@ -54,7 +57,7 @@ def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
     # 2. Service completions at the CURRENT true rates (re-derived from the
     #    stored class each slot, so scenario drift reaches in-flight tasks).
     done = jax.random.bernoulli(
-        k_serve, claiming.tier_rates(s.serving_tier, tm3))
+        k_serve, claiming.tier_rates(s.serving_tier, tmk))
     completions = jnp.sum(done).astype(jnp.int32)
     serving_tier = jnp.where(done, 0, s.serving_tier)
 
@@ -62,11 +65,11 @@ def slot_step(s: JsqMwState, key: jax.Array, types: jnp.ndarray,
     sid = jnp.arange(q.shape[0])
 
     def score_fn(m, qv):
-        w = loc.pair_rate(m, sid, rack_of, est[m])
+        w = loc.pair_rate(m, sid, anc, est[m])
         return w * qv.astype(jnp.float32)
 
     def tier_fn(m, n):
-        return claiming.pair_tier(m, n, rack_of)
+        return claiming.pair_tier(m, n, anc)
 
     q, serving_tier = claiming.claim_loop(q, serving_tier, k_claim,
                                           score_fn, tier_fn)
@@ -86,8 +89,8 @@ class JsqMaxWeightPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> JsqMwState:
         return init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
-        return slot_step(s, key, types, active, est, true_rates, rack_of)
+    def slot_step(self, s, key, types, active, est, true_rates, ancestors):
+        return slot_step(s, key, types, active, est, true_rates, ancestors)
 
     def num_in_system(self, s: JsqMwState) -> jnp.ndarray:
         return num_in_system(s)

@@ -1,93 +1,265 @@
-"""Rack/locality model of a data center (paper §2, System Model).
+"""Tier-generic locality model of a data center (paper §2, System Model).
 
-A data center has ``M`` servers grouped into racks of ``M_R`` servers.  A map
-task's data chunk is replicated on 3 servers (its *local* servers); servers
-sharing a rack with a local server are *rack-local*; everything else is
-*remote*.  Mean service rates are ``alpha > beta > gamma`` for the three
-tiers (probability of completing the in-service task in one slot of the
-discrete-time model, i.e. geometric service with means 1/alpha etc.).
+The paper instantiates a 3-tier hierarchy — ``M`` servers grouped into
+racks, with mean service rates ``alpha > beta > gamma`` for local /
+rack-local / remote service — but states the general fact outright: the
+number of switches in the path of a data transfer depends on the internal
+network structure of the data center.  This module is the tier-generic
+core every layer derives from:
+
+  * `Topology` — a K-level hierarchy (server -> rack -> pod -> ... ->
+    root).  ``Topology(24, 6)`` is the paper's flat-rack default (K = 3
+    tiers); ``Topology(24, (4, 12))`` adds a pod level (racks of 4 inside
+    pods of 12 servers, K = 4); heterogeneous group sizes are allowed
+    (``Topology(24, ((6, 6, 4, 4, 4),))``).  The normalized form is an
+    **ancestor table**: a ``(depth, M)`` array whose row ``l`` holds each
+    server's group id at level ``l`` (level 0 = rack).
+  * `Rates` — a strictly-decreasing ``(K,)`` service-rate vector
+    (completion prob/slot of the discrete-time model); ``Rates(a, b, g)``
+    keeps the classic 3-tier spelling and ``.alpha``/``.beta``/``.gamma``
+    remain as views of ``values[0]``/``values[1]``/``values[-1]``.
+  * tier seam — `server_tiers` / `tier_masks` / `pair_tiers` map
+    (task, server) and (server, server) relations onto tier indices
+    ``0..K-1`` (0 = local, K-1 = remote); every policy, kernel and host
+    router derives its locality logic from these.
 
 Capacity (hot-rack traffic).  With a fraction ``p_hot`` of arrivals drawn
-with all three local servers inside rack 0 ("hot" types) and the rest
-uniform over all servers, the fluid capacity is
+with all three local servers inside one rack ("hot" types) and the rest
+uniform over all servers, the K-tier fluid capacity is the greedy
+water-filling over tier pools: the hot rack serves hot tasks at
+``rates[0]`` (with diverse hot types a balanced scheduler keeps each
+rack server on its own local tasks), overflow hot traffic spills to the
+tier-2 pool at ``rates[2]``, then tier-3, ...; uniform tasks are served
+locally at ``rates[0]`` anywhere.  Setting the utilisation of the
+partially-filled pool's regime to one gives, for the regime in which
+pools ``i < j`` are hot-saturated,
 
-    if p_hot * M * alpha <= M_R * alpha:      Lambda* = M * alpha
-    else:  Lambda* = (M - M_R + M_R * alpha/gamma)
-                     / ((1-p_hot)/alpha + p_hot/gamma)
+    Lambda_j = (M - sum_{i<j} n_i + sum_{i<j} n_i r_i / r_j)
+               / (p_hot / r_j + (1 - p_hot) / rates[0])
 
-Derivation: rack-0 servers serve hot tasks locally at ``alpha`` (with
-diverse hot types every rack-0 server is local to many hot types, so a
-balanced scheduler keeps each on its own local tasks); overflow hot traffic
-is served remotely at ``gamma`` by the other racks, which also absorb the
-uniform traffic locally at ``alpha``.  Uniform tasks lose nothing by
-avoiding rack 0 since any of their (random) local servers serves at
-``alpha``.  Setting the other-rack utilisation to one gives the formula.
+and the capacity is the unique consistent regime (K = 3 recovers the
+closed form the seed shipped; validated against a brute-force LP in
+tests/test_topology.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import numbers
-from functools import partial
+from functools import lru_cache
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-LOCAL, RACK_LOCAL, REMOTE = 1, 2, 3  # service classes; 0 == idle / none
+LOCAL, RACK_LOCAL, REMOTE = 1, 2, 3  # K=3 service classes; 0 == idle / none
 NUM_REPLICAS = 3  # Hadoop default: each chunk lives on 3 servers
+
+# One hierarchy level: a uniform group size (int, in servers) or explicit
+# per-group sizes (heterogeneous, must tile the fleet).
+LevelSpec = Union[int, Sequence[int]]
+
+
+def _normalize_levels(num_servers: int, spec) -> Tuple[Tuple[int, ...], ...]:
+    """Canonical per-level group-size tuples for a `Topology` spec.
+
+    `spec` is the legacy rack size (int), or a sequence of `LevelSpec`s
+    ordered from the finest grouping (racks) outward (pods, cores, ...).
+    Every level must tile ``num_servers`` exactly and nest inside the next
+    (each pod is a union of whole racks) — the validation the retired
+    host-side ``ClusterSpec`` never did.
+    """
+    if isinstance(spec, numbers.Integral):
+        spec = (int(spec),)
+    levels = []
+    for li, level in enumerate(spec):
+        if isinstance(level, numbers.Integral):
+            size = int(level)
+            if size < 1 or num_servers % size != 0:
+                raise ValueError(
+                    f"level {li}: group size {size} does not tile "
+                    f"num_servers={num_servers}")
+            sizes = (size,) * (num_servers // size)
+        else:
+            sizes = tuple(int(s) for s in level)
+            if any(s < 1 for s in sizes):
+                raise ValueError(f"level {li}: group sizes must be >= 1, "
+                                 f"got {sizes}")
+            if sum(sizes) != num_servers:
+                raise ValueError(
+                    f"level {li}: group sizes {sizes} sum to {sum(sizes)}, "
+                    f"do not tile num_servers={num_servers}")
+        levels.append(sizes)
+    # nesting: every group boundary at level l+1 must align with level l
+    for li in range(1, len(levels)):
+        inner = np.cumsum(levels[li - 1])
+        outer = np.cumsum(levels[li])
+        if not set(outer).issubset(set(inner)):
+            raise ValueError(
+                f"level {li} groups {levels[li]} do not nest on level "
+                f"{li - 1} boundaries {levels[li - 1]}")
+        if len(levels[li]) >= len(levels[li - 1]):
+            raise ValueError(
+                f"level {li} must coarsen level {li - 1}: "
+                f"{len(levels[li])} groups vs {len(levels[li - 1])}")
+    return tuple(levels)
+
+
+@lru_cache(maxsize=64)
+def _ancestor_table(num_servers: int,
+                    levels: Tuple[Tuple[int, ...], ...]) -> np.ndarray:
+    """(depth, M) int32 ancestor-group id per server per level."""
+    table = np.empty((len(levels), num_servers), np.int32)
+    for li, sizes in enumerate(levels):
+        table[li] = np.repeat(np.arange(len(sizes), dtype=np.int32), sizes)
+    table.setflags(write=False)
+    return table
 
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
-    """Static rack structure: ``num_servers`` servers in racks of ``servers_per_rack``."""
+    """Static K-level hierarchy of ``num_servers`` servers.
+
+    ``group_sizes`` orders the levels from finest (racks) outward; each
+    entry is a uniform size in servers or explicit per-group sizes.  The
+    number of locality tiers is ``depth + 2`` (local, one per level,
+    remote): ``Topology(M, g)`` is the classic 3-tier rack model,
+    ``Topology(M, ())`` a flat 2-tier fleet, ``Topology(M, (g, p))`` a
+    4-tier fat-tree pod topology.
+    """
 
     num_servers: int
-    servers_per_rack: int
+    group_sizes: Union[int, Sequence[LevelSpec]] = ()
 
     def __post_init__(self):
-        if self.num_servers % self.servers_per_rack != 0:
-            raise ValueError(
-                f"num_servers={self.num_servers} not divisible by "
-                f"servers_per_rack={self.servers_per_rack}"
-            )
-        if self.servers_per_rack < NUM_REPLICAS:
-            raise ValueError("need at least 3 servers per rack for hot-rack types")
+        if self.num_servers < 1:
+            raise ValueError(f"need num_servers >= 1, got {self.num_servers}")
+        levels = _normalize_levels(self.num_servers, self.group_sizes)
+        object.__setattr__(self, "group_sizes", levels)
+
+    # -- structure ----------------------------------------------------------
+    @property
+    def depth(self) -> int:
+        """Hierarchy levels above the server (1 for the flat-rack model)."""
+        return len(self.group_sizes)
 
     @property
+    def num_tiers(self) -> int:
+        """K: local + one tier per level + remote."""
+        return self.depth + 2
+
+    @property
+    def ancestors(self) -> np.ndarray:
+        """(depth, M) int32 ancestor-group id of each server at each level
+        (level 0 = rack) — the normalized form every consumer derives
+        tiers from."""
+        return _ancestor_table(self.num_servers, self.group_sizes)
+
+    def groups_at(self, level: int) -> Tuple[int, ...]:
+        """Group sizes (in servers) at hierarchy `level` (0 = rack)."""
+        return self.group_sizes[level]
+
+    # -- rack-level views (level 0; the paper's vocabulary) -----------------
+    @property
     def num_racks(self) -> int:
-        return self.num_servers // self.servers_per_rack
+        return len(self.group_sizes[0]) if self.depth else 1
 
     @property
     def rack_of(self) -> np.ndarray:
-        """(M,) rack id of each server."""
-        return np.arange(self.num_servers) // self.servers_per_rack
+        """(M,) rack id of each server (all zero for a depth-0 fleet)."""
+        if self.depth:
+            return self.ancestors[0]
+        return np.zeros(self.num_servers, np.int32)
+
+    @property
+    def servers_per_rack(self) -> int:
+        """Uniform rack size (raises for heterogeneous racks)."""
+        sizes = set(self.group_sizes[0]) if self.depth \
+            else {self.num_servers}
+        if len(sizes) != 1:
+            raise ValueError(f"racks are heterogeneous: "
+                             f"{self.group_sizes[0]}; use groups_at(0)")
+        return next(iter(sizes))
+
+    @property
+    def min_rack_size(self) -> int:
+        return min(self.group_sizes[0]) if self.depth else self.num_servers
+
+    # -- legacy host-side aliases (the retired ClusterSpec vocabulary) ------
+    @property
+    def num_workers(self) -> int:
+        return self.num_servers
+
+    @property
+    def pod_of(self) -> np.ndarray:
+        return self.rack_of
 
 
-@dataclasses.dataclass(frozen=True)
 class Rates:
-    """Service rates per locality tier (completion prob/slot)."""
+    """Strictly-decreasing service rates per locality tier
+    (completion prob/slot): ``Rates(alpha, beta, gamma)`` or
+    ``Rates((r0, r1, ..., r_{K-1}))``."""
 
-    alpha: float = 0.5
-    beta: float = 0.45
-    gamma: float = 0.25
+    __slots__ = ("values",)
 
-    def __post_init__(self):
-        if not (0 < self.gamma < self.beta < self.alpha <= 1.0):
-            raise ValueError(f"need 0 < gamma < beta < alpha <= 1, got {self}")
+    def __init__(self, *values):
+        if not values:
+            values = (0.5, 0.45, 0.25)  # the paper's defaults
+        elif len(values) == 1 and not isinstance(values[0], numbers.Real):
+            values = tuple(values[0])
+        values = tuple(float(v) for v in values)
+        if len(values) < 2:
+            raise ValueError(f"need >= 2 tier rates, got {values}")
+        ok = all(0.0 < v <= 1.0 for v in values) and \
+            all(a > b for a, b in zip(values, values[1:]))
+        if not ok:
+            raise ValueError(f"need 1 >= r0 > r1 > ... > r_K-1 > 0, "
+                             f"got {self.__class__.__name__}{values}")
+        object.__setattr__(self, "values", values)
+
+    def __setattr__(self, name, value):  # frozen, like the old dataclass
+        raise dataclasses.FrozenInstanceError(f"cannot assign to {name!r}")
+
+    @property
+    def num_tiers(self) -> int:
+        return len(self.values)
+
+    # classic 3-tier spellings (alpha fastest, gamma slowest)
+    @property
+    def alpha(self) -> float:
+        return self.values[0]
+
+    @property
+    def beta(self) -> float:
+        return self.values[1]
+
+    @property
+    def gamma(self) -> float:
+        return self.values[-1]
 
     @property
     def heavy_traffic_optimal(self) -> bool:
-        """Balanced-PANDAS heavy-traffic delay optimality condition (paper §3.2)."""
-        return self.beta**2 > self.alpha * self.gamma
+        """Balanced-PANDAS heavy-traffic delay optimality condition (paper
+        §3.2), on the (fastest, second, slowest) tiers."""
+        return self.values[1] ** 2 > self.values[0] * self.values[-1]
 
     def scaled(self, mult: float) -> "Rates":
-        """Mis-estimated rates: all three off by the same multiplier (paper §4)."""
-        return Rates(min(self.alpha * mult, 1.0), min(self.beta * mult, 1.0),
-                     min(self.gamma * mult, 1.0))
+        """Mis-estimated rates: every tier off by the same multiplier
+        (paper §4); clamped into (0, 1] and re-validated."""
+        return Rates(tuple(min(v * mult, 1.0) for v in self.values))
 
     def as_array(self) -> jnp.ndarray:
-        return jnp.array([self.alpha, self.beta, self.gamma], dtype=jnp.float32)
+        return jnp.array(self.values, dtype=jnp.float32)
+
+    def __repr__(self) -> str:
+        return f"Rates{self.values}"
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Rates) and self.values == other.values
+
+    def __hash__(self) -> int:
+        return hash(("Rates", self.values))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,81 +286,177 @@ class Traffic:
             raise ValueError(f"lam_total must be >= 0, got {self.lam_total}")
 
 
-def capacity_hot_rack(topo: Topology, rates: Rates, p_hot: float) -> float:
-    """Fluid capacity Lambda* (tasks/slot) for the hot-rack traffic pattern."""
-    m, mr = topo.num_servers, topo.servers_per_rack
-    a, g = rates.alpha, rates.gamma
-    lam_uniform_only = m * a
-    if p_hot * lam_uniform_only <= mr * a:  # hot fits in rack 0 locally
-        return lam_uniform_only
-    return (m - mr + mr * a / g) / ((1.0 - p_hot) / a + p_hot / g)
+# ---------------------------------------------------------------------------
+# K-tier fluid capacity (hot-rack traffic)
+# ---------------------------------------------------------------------------
+
+
+def hot_rack_tiers(topo: Topology, hot_rack: int = 0) -> np.ndarray:
+    """(M,) tier of each server w.r.t. a task local to rack ``hot_rack``.
+
+    Rack members come out as tier <= 1 (they serve hot tasks at
+    ``rates[0]`` under the balanced-scheduler argument in the module
+    docstring); everyone else at the tier of their deepest shared group.
+    """
+    anc = topo.ancestors
+    reps = np.flatnonzero(topo.rack_of == hot_rack)
+    if reps.size == 0:
+        raise ValueError(f"hot_rack={hot_rack} is empty "
+                         f"(topology has {topo.num_racks} racks)")
+    tier = np.full(topo.num_servers, topo.num_tiers - 1, np.int64)
+    for lvl in range(topo.depth - 1, -1, -1):
+        tier[np.isin(anc[lvl], np.unique(anc[lvl][reps]))] = lvl + 1
+    return tier
+
+
+def capacity_hot_rack(topo: Topology, rates: Union[Rates, Sequence[float]],
+                      p_hot: float, hot_rack: int = 0) -> float:
+    """K-tier fluid capacity Lambda* (tasks/slot) for the hot-rack pattern.
+
+    Greedy water-filling over tier pools (see module docstring); for the
+    3-tier rack model this reproduces the seed's closed form exactly, and
+    tests/test_topology.py checks it against a brute-force LP at
+    K = 2, 3, 4 including heterogeneous rack sizes.
+    """
+    r = np.asarray(rates.values if isinstance(rates, Rates) else rates,
+                   np.float64)
+    k = r.size
+    if k != topo.num_tiers:
+        raise ValueError(f"rates have {k} tiers but topology has "
+                         f"{topo.num_tiers}")
+    m = topo.num_servers
+    if p_hot <= 0.0:
+        return float(m * r[0])
+    tier = hot_rack_tiers(topo, hot_rack)
+    pools = [(float(r[0]), int(np.sum(tier <= 1)))]
+    pools += [(float(r[lvl]), int(np.sum(tier == lvl)))
+              for lvl in range(2, k) if np.sum(tier == lvl) > 0]
+    used_n = 0.0   # servers in hot-saturated pools
+    used_c = 0.0   # hot service capacity of those pools
+    for rate_j, n_j in pools:
+        lam = (m - used_n + used_c / rate_j) \
+            / (p_hot / rate_j + (1.0 - p_hot) / r[0])
+        x_j = p_hot * lam - used_c  # hot traffic landing in pool j
+        if -1e-9 <= x_j <= n_j * rate_j + 1e-9:
+            return float(lam)
+        used_n += n_j
+        used_c += n_j * rate_j
+    raise AssertionError("no consistent fluid regime found")  # unreachable
 
 
 # ---------------------------------------------------------------------------
-# Vectorized locality primitives (jit/vmap friendly)
+# Vectorized tier primitives (jit/vmap friendly) — the seam every consumer
+# (policies, kernels, simulator) derives locality from
 # ---------------------------------------------------------------------------
 
-def locality_masks(task_locals: jnp.ndarray, rack_of: jnp.ndarray):
-    """Per-server local / rack-local masks for one task.
+
+def as_ancestors(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalize a legacy (M,) rack map to a (depth, M) ancestor table."""
+    a = jnp.asarray(x, jnp.int32)
+    return a[None, :] if a.ndim == 1 else a
+
+
+def server_tiers(task_locals: jnp.ndarray,
+                 ancestors: jnp.ndarray) -> jnp.ndarray:
+    """(M,) tier index 0..K-1 of every server for one task.
 
     task_locals: (3,) int32 server ids (the task's replicas)
-    rack_of:     (M,) int32 rack id per server
-    returns (local_mask, rack_mask): (M,) bool; rack_mask excludes locals.
+    ancestors:   (depth, M) int32 table (or legacy (M,) rack map)
     """
-    m = rack_of.shape[0]
+    anc = as_ancestors(ancestors)
+    d, m = anc.shape
+    tier = jnp.full((m,), d + 1, jnp.int32)
+    for lvl in range(d - 1, -1, -1):
+        row = anc[lvl]
+        share = jnp.any(row[:, None] == row[task_locals][None, :], axis=1)
+        tier = jnp.where(share, lvl + 1, tier)
     sid = jnp.arange(m, dtype=task_locals.dtype)
     local = jnp.any(sid[:, None] == task_locals[None, :], axis=1)
-    local_racks = rack_of[task_locals]  # (3,)
-    in_rack = jnp.any(rack_of[:, None] == local_racks[None, :], axis=1)
-    return local, in_rack & ~local
+    return jnp.where(local, 0, tier)
 
 
-def rate_vector(task_locals: jnp.ndarray, rack_of: jnp.ndarray,
-                rates3: jnp.ndarray) -> jnp.ndarray:
-    """(M,) per-server service rate for one task under rates3=[a,b,g]."""
-    local, rack = locality_masks(task_locals, rack_of)
-    return jnp.where(local, rates3[0], jnp.where(rack, rates3[1], rates3[2]))
+def tier_masks(task_locals: jnp.ndarray, ancestors: jnp.ndarray) -> jnp.ndarray:
+    """(K, M) bool one-hot tier masks for one task (row k: servers at tier k)."""
+    anc = as_ancestors(ancestors)
+    tiers = server_tiers(task_locals, anc)
+    k = anc.shape[0] + 2
+    return tiers[None, :] == jnp.arange(k, dtype=jnp.int32)[:, None]
 
 
-def class_of(task_locals: jnp.ndarray, rack_of: jnp.ndarray,
+def locality_masks(task_locals: jnp.ndarray, rack_of: jnp.ndarray):
+    """Legacy 3-tier view: (local_mask, rack_mask) over (M,) servers;
+    rack_mask excludes locals.  Derived from `server_tiers`."""
+    tiers = server_tiers(task_locals, rack_of)
+    return tiers == 0, tiers == 1
+
+
+def rate_vector(task_locals: jnp.ndarray, ancestors: jnp.ndarray,
+                rates_k: jnp.ndarray) -> jnp.ndarray:
+    """(M,) per-server service rate for one task under a (K,) rate vector."""
+    return jnp.asarray(rates_k)[server_tiers(task_locals, ancestors)]
+
+
+def class_of(task_locals: jnp.ndarray, ancestors: jnp.ndarray,
              server: jnp.ndarray) -> jnp.ndarray:
-    """Service class (LOCAL/RACK_LOCAL/REMOTE) of `server` for this task."""
-    local, rack = locality_masks(task_locals, rack_of)
-    return jnp.where(local[server], LOCAL,
-                     jnp.where(rack[server], RACK_LOCAL, REMOTE)).astype(jnp.int32)
+    """Service class 1..K (LOCAL/RACK_LOCAL/.../REMOTE) of `server`."""
+    return (server_tiers(task_locals, ancestors)[server] + 1).astype(jnp.int32)
 
 
-def pair_rate(m: jnp.ndarray, n: jnp.ndarray, rack_of: jnp.ndarray,
-              rates3: jnp.ndarray) -> jnp.ndarray:
-    """(m,n)-relation proxy rate: server m pulling from server n's local queue.
+def pair_tiers(m: jnp.ndarray, n: jnp.ndarray,
+               ancestors: jnp.ndarray) -> jnp.ndarray:
+    """(m,n)-relation tier index 0..K-1: 0 if m == n, else 1 + deepest
+    shared level, else K-1.  Broadcasts over m/n."""
+    anc = as_ancestors(ancestors)
+    d = anc.shape[0]
+    tier = jnp.full(jnp.broadcast_shapes(jnp.shape(m), jnp.shape(n)), d + 1,
+                    jnp.int32)
+    for lvl in range(d - 1, -1, -1):
+        tier = jnp.where(anc[lvl][m] == anc[lvl][n], lvl + 1, tier)
+    return jnp.where(m == n, 0, tier)
 
-    alpha if m == n, beta if same rack, gamma otherwise.  Used by JSQ-MW /
-    Priority both as the MaxWeight weight (with estimated rates) and as the
-    simulated service rate (with true rates); see DESIGN.md §3 for the O(1/M)
-    fidelity note.
-    """
-    return jnp.where(m == n, rates3[0],
-                     jnp.where(rack_of[m] == rack_of[n], rates3[1], rates3[2]))
+
+def pair_rate(m: jnp.ndarray, n: jnp.ndarray, ancestors: jnp.ndarray,
+              rates_k: jnp.ndarray) -> jnp.ndarray:
+    """(m,n)-relation proxy rate: server m pulling from server n's local
+    queue, at the rate of their pair tier.  Used by JSQ-MW / Priority both
+    as the MaxWeight weight (with estimated rates) and as the simulated
+    service rate (with true rates); see DESIGN.md §3 for the O(1/M)
+    fidelity note."""
+    return jnp.asarray(rates_k)[pair_tiers(m, n, ancestors)]
 
 
 def sample_task_types_at(key: jax.Array, rack_of: jnp.ndarray, p_hot,
-                         hot_rack, batch: int) -> jnp.ndarray:
+                         hot_rack, batch: int,
+                         rack_weights: Optional[jnp.ndarray] = None
+                         ) -> jnp.ndarray:
     """Sample `batch` task types: (batch, 3) int32, 3 distinct servers each.
 
-    Hot tasks (prob `p_hot`) draw all replicas from rack `hot_rack`; the
-    rest uniformly from all servers.  Uses Gumbel top-k for
-    without-replacement sampling.  `p_hot` and `hot_rack` may be traced
-    per-slot scenario knobs; for p_hot equal to the config constant and
-    hot_rack == 0 the draws are bitwise identical to the static model
-    (common random numbers across scenarios).
+    Hot tasks (prob `p_hot`) draw all replicas from one rack — `hot_rack`
+    when `rack_weights` is None, else a rack drawn per task from the
+    (R,) arrival-weight vector (the per-rack skew knob); the rest
+    uniformly from all servers.  Uses Gumbel top-k for
+    without-replacement sampling.  `p_hot`, `hot_rack` and `rack_weights`
+    may be traced per-slot scenario knobs; with `rack_weights is None`,
+    p_hot equal to the config constant and hot_rack == 0 the draws are
+    bitwise identical to the static model (common random numbers across
+    scenarios — the weighted path splits the key differently and only
+    activates when a segment opts into weights).
     """
     m = rack_of.shape[0]
-    k_hot, k_gum = jax.random.split(key)
+    if rack_weights is None:
+        k_hot, k_gum = jax.random.split(key)
+        hot_racks = jnp.broadcast_to(jnp.asarray(hot_rack, jnp.int32),
+                                     (batch,))
+    else:
+        k_hot, k_rack, k_gum = jax.random.split(key, 3)
+        logw = jnp.log(jnp.asarray(rack_weights, jnp.float32))
+        hot_racks = jax.random.categorical(k_rack, logw, shape=(batch,)
+                                           ).astype(jnp.int32)
     hot = jax.random.bernoulli(k_hot, p_hot, (batch,))
-    in_hot_rack = rack_of == hot_rack  # (m,)
+    in_hot_rack = rack_of[None, :] == hot_racks[:, None]  # (batch, m)
     logits = jnp.where(
         hot[:, None],
-        jnp.where(in_hot_rack[None, :], 0.0, -jnp.inf),
+        jnp.where(in_hot_rack, 0.0, -jnp.inf),
         jnp.zeros((1, m)),
     )
     gumbel = jax.random.gumbel(k_gum, (batch, m))
@@ -205,13 +473,15 @@ def sample_task_types(key: jax.Array, topo: Topology, traffic: Traffic,
 
 
 def sample_arrivals_at(key: jax.Array, rack_of: jnp.ndarray, lam, p_hot,
-                       hot_rack, max_arrivals: int):
+                       hot_rack, max_arrivals: int,
+                       rack_weights: Optional[jnp.ndarray] = None):
     """One slot of arrivals under (possibly traced) per-slot scenario knobs:
     returns (types (C_A,3) int32, active (C_A,) bool)."""
     k_n, k_t = jax.random.split(key)
     n = jnp.minimum(jax.random.poisson(k_n, lam), max_arrivals)
     active = jnp.arange(max_arrivals) < n
-    types = sample_task_types_at(k_t, rack_of, p_hot, hot_rack, max_arrivals)
+    types = sample_task_types_at(k_t, rack_of, p_hot, hot_rack, max_arrivals,
+                                 rack_weights)
     return types, active
 
 
@@ -223,15 +493,16 @@ def sample_arrivals(key: jax.Array, topo: Topology, traffic: Traffic):
 
 
 def per_server_rates(rates: jnp.ndarray, num_servers: int) -> jnp.ndarray:
-    """Broadcast true service rates to per-server form: (M, 3).
+    """Broadcast true service rates to per-server form: (M, K).
 
-    Accepts the classic shared ``(3,)`` vector or an ``(M, 3)`` matrix (the
-    scenario subsystem's per-server fault injection).  Policies normalize
-    through this one helper, so the simulator can feed either with zero
-    per-scenario branching.
+    Accepts the shared ``(K,)`` vector or an ``(M, K)`` matrix (the
+    scenario subsystem's per-server fault injection); K is inferred from
+    the input.  Policies normalize through this one helper, so the
+    simulator can feed either with zero per-scenario branching.
     """
-    r = jnp.asarray(rates, jnp.float32).reshape((-1, 3))
-    return jnp.broadcast_to(r, (num_servers, 3))
+    r = jnp.asarray(rates, jnp.float32)
+    r = r[None, :] if r.ndim == 1 else r
+    return jnp.broadcast_to(r, (num_servers, r.shape[-1]))
 
 
 def random_argmin(key: jax.Array, score: jnp.ndarray) -> jnp.ndarray:

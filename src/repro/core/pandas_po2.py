@@ -39,44 +39,37 @@ from repro.core.policy import SlotPolicy, register_policy
 
 def route_one_po_d(s: bp.PandasState, key: jax.Array, task: jnp.ndarray,
                    active: jnp.ndarray, est: jnp.ndarray,
-                   rack_of: jnp.ndarray, d: int) -> bp.PandasState:
+                   ancestors: jnp.ndarray, d: int) -> bp.PandasState:
     """Route one arrival over {3 locals} ∪ {d uniform samples}.
 
     Same score (W/rate with the infinitesimal faster-tier preference, see
     `bp.route_one`) restricted to the candidate mask; non-candidates score
     +inf so `random_argmin` never picks them.
     """
-    m = rack_of.shape[0]
+    anc = loc.as_ancestors(ancestors)
+    m = anc.shape[1]
     k_cand, k_tie = jax.random.split(key)
     sampled = jax.random.choice(k_cand, m, (min(d, m),), replace=False)
-    local, rack = loc.locality_masks(task, rack_of)
-    cand = local | jnp.zeros((m,), bool).at[sampled].set(True)
-    est_rate = jnp.where(local, est[:, 0], jnp.where(rack, est[:, 1],
-                                                     est[:, 2]))
+    tier_m = loc.server_tiers(task, anc)
+    cand = (tier_m == 0) | jnp.zeros((m,), bool).at[sampled].set(True)
+    est_rate = jnp.take_along_axis(est, tier_m[:, None], axis=1)[:, 0]
     score = bp.workload(s, est) / est_rate - est_rate * 1e-6
     score = jnp.where(cand, score, jnp.inf)
     m_star = loc.random_argmin(k_tie, score)
-    cls = jnp.where(local[m_star], loc.LOCAL,
-                    jnp.where(rack[m_star], loc.RACK_LOCAL, loc.REMOTE))
-    inc = active.astype(jnp.int32)
-    return bp.PandasState(
-        q_local=s.q_local.at[m_star].add(inc * (cls == loc.LOCAL)),
-        q_rack=s.q_rack.at[m_star].add(inc * (cls == loc.RACK_LOCAL)),
-        q_remote=s.q_remote.at[m_star].add(inc * (cls == loc.REMOTE)),
-        serving=s.serving,
-    )
+    return bp.push_task(s, m_star, tier_m, active)
 
 
 def slot_step(s: bp.PandasState, key: jax.Array, types: jnp.ndarray,
               active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
-              rack_of: jnp.ndarray, d: int = 2):
+              ancestors: jnp.ndarray, d: int = 2):
     """One slot: po-d arrival routing, then shared PANDAS service/schedule."""
+    anc = loc.as_ancestors(ancestors)
     k_route, k_serve = jax.random.split(key)
     n_arr = types.shape[0]
 
     def body(i, st):
         return route_one_po_d(st, jax.random.fold_in(k_route, i), types[i],
-                              active[i], est, rack_of, d)
+                              active[i], est, anc, d)
     s = jax.lax.fori_loop(0, n_arr, body, s)
 
     return bp.serve_and_schedule(s, k_serve, true_rates)
@@ -103,8 +96,8 @@ class PandasPoDPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> bp.PandasState:
         return bp.init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
-        return slot_step(s, key, types, active, est, true_rates, rack_of,
+    def slot_step(self, s, key, types, active, est, true_rates, ancestors):
+        return slot_step(s, key, types, active, est, true_rates, ancestors,
                          d=self.d)
 
     def num_in_system(self, s: bp.PandasState) -> jnp.ndarray:

@@ -51,7 +51,7 @@ class Decision:
     """Outcome of `Router.route`: where an arriving task went.
 
     worker   -- assigned worker id, or -1 when assignment is deferred
-    tier     -- locality tier (0 local / 1 rack / 2 remote) at the assigned
+    tier     -- locality tier (0 local .. K-1 remote) at the assigned
                 worker, or -1 when deferred / unknown at routing time
     deferred -- True when the router queues globally and picks the worker
                 only at claim time (e.g. FIFO)
@@ -114,14 +114,16 @@ class SlotPolicy(abc.ABC):
     @abc.abstractmethod
     def slot_step(self, state, key: jax.Array, types: jnp.ndarray,
                   active: jnp.ndarray, est: jnp.ndarray,
-                  true_rates: jnp.ndarray, rack_of: jnp.ndarray):
+                  true_rates: jnp.ndarray, ancestors: jnp.ndarray):
         """One time slot: arrivals -> completions -> scheduling.
 
-        types/active: the slot's (C_A, 3)/(C_A,) arrival batch; est: (M, 3)
+        types/active: the slot's (C_A, 3)/(C_A,) arrival batch; est: (M, K)
         *estimated* rates the scheduler decides with; true_rates: the rates
-        the service dynamics use — the shared (3,) vector, or (M, 3)
+        the service dynamics use — the shared (K,) vector, or (M, K)
         per-server under scenario fault injection (stragglers, congestion);
-        policies normalize via `locality.per_server_rates`.  Returns
+        policies normalize via `locality.per_server_rates`.  `ancestors` is
+        the topology's (depth, M) ancestor table (policies accept the
+        legacy (M,) rack map too, via `locality.as_ancestors`).  Returns
         (state, completions int32).
         """
 
@@ -143,9 +145,11 @@ class SlotPolicy(abc.ABC):
 class Router(abc.ABC):
     """Incremental host-side scheduler over an abstract worker fleet.
 
-    Uniform constructor: (spec, rates, estimator=None, seed=0).  `rates` is
-    the (3,) prior (alpha, beta, gamma); when an `EwmaRateEstimator` is
-    given its live (M, 3) estimates are used instead (blind mode).  Every
+    Uniform constructor: (spec, rates, estimator=None, seed=0).  `spec` is
+    the same `locality.Topology` the JAX side uses (the old separate
+    ``ClusterSpec`` is retired); `rates` is the (K,) tier-rate prior,
+    K matching ``spec.num_tiers``.  When an `EwmaRateEstimator` is given
+    its live (M, K) estimates are used instead (blind mode).  Every
     router accepts and stores the estimator, even rate-oblivious ones —
     observations still flow through `on_complete`, so switching a fleet
     from FIFO to a rate-aware policy needs no re-warming.
@@ -156,14 +160,19 @@ class Router(abc.ABC):
     def __init__(self, spec, rates: Sequence[float], estimator=None,
                  seed: int = 0):
         self.spec = spec
-        self.pod_of = spec.pod_of
-        self.prior = np.asarray(rates, np.float32)  # (3,) alpha,beta,gamma
+        self.ancestors = np.asarray(spec.ancestors)  # (depth, M)
+        self.num_tiers = spec.num_tiers
+        self.prior = np.asarray(rates, np.float32)   # (K,) fastest first
+        if self.prior.shape != (self.num_tiers,):
+            raise ValueError(
+                f"router prior has {self.prior.shape[0]} tier rates but the "
+                f"fleet topology has {self.num_tiers} tiers")
         self.estimator = estimator
         self.rng = np.random.default_rng(seed)
 
     # -- estimated rates ----------------------------------------------------
     def _est(self) -> np.ndarray:
-        """(M, 3) current estimated rates (estimator if present, else prior)."""
+        """(M, K) current estimated rates (estimator if present, else prior)."""
         if self.estimator is not None:
             return self.estimator.rates
         return np.tile(self.prior, (self.spec.num_workers, 1))

@@ -38,11 +38,12 @@ def num_in_system(s: PriorityState) -> jnp.ndarray:
 
 def slot_step(s: PriorityState, key: jax.Array, types: jnp.ndarray,
               active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
-              rack_of: jnp.ndarray):
+              ancestors: jnp.ndarray):
     del est  # the Priority algorithm never consults service rates
+    anc = loc.as_ancestors(ancestors)
     k_route, k_serve, k_claim = jax.random.split(key, 3)
     n_arr = types.shape[0]
-    tm3 = loc.per_server_rates(true_rates, s.q.shape[0])
+    tmk = loc.per_server_rates(true_rates, s.q.shape[0])
 
     def body(i, q):
         return claiming.jsq_route_one(q, jax.random.fold_in(k_route, i),
@@ -50,7 +51,7 @@ def slot_step(s: PriorityState, key: jax.Array, types: jnp.ndarray,
     q = jax.lax.fori_loop(0, n_arr, body, s.q)
 
     done = jax.random.bernoulli(
-        k_serve, claiming.tier_rates(s.serving_tier, tm3))
+        k_serve, claiming.tier_rates(s.serving_tier, tmk))
     completions = jnp.sum(done).astype(jnp.int32)
     serving_tier = jnp.where(done, 0, s.serving_tier)
 
@@ -63,7 +64,7 @@ def slot_step(s: PriorityState, key: jax.Array, types: jnp.ndarray,
         return jnp.where(own, big, qv.astype(jnp.float32))
 
     def tier_fn(m, n):
-        return claiming.pair_tier(m, n, rack_of)
+        return claiming.pair_tier(m, n, anc)
 
     q, serving_tier = claiming.claim_loop(q, serving_tier, k_claim,
                                           score_fn, tier_fn)
@@ -83,8 +84,8 @@ class PriorityPolicy(SlotPolicy):
     def init_state(self, topo: loc.Topology, **opts) -> PriorityState:
         return init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true_rates, rack_of):
-        return slot_step(s, key, types, active, est, true_rates, rack_of)
+    def slot_step(self, s, key, types, active, est, true_rates, ancestors):
+        return slot_step(s, key, types, active, est, true_rates, ancestors)
 
     def num_in_system(self, s: PriorityState) -> jnp.ndarray:
         return num_in_system(s)

@@ -120,7 +120,7 @@ def drift_study(cfg: StudyConfig,
         scen_map = {s.name if isinstance(s, (Scenario, ScenarioConfig))
                     else str(s): s for s in scenarios}
     r = cfg.sim.true_rates
-    prior = (r.alpha, r.beta, r.gamma)
+    prior = r.values
     arms: Dict[str, PolicyLike] = {
         "fixed_prior": "balanced_pandas",
         "blind_ewma": PolicyConfig("blind_pandas", {"prior": prior}),

@@ -72,6 +72,18 @@ class SimConfig:
         if not 0 <= self.warmup < self.horizon:
             raise ValueError(f"need 0 <= warmup < horizon, got "
                              f"warmup={self.warmup} horizon={self.horizon}")
+        # Rate vector and hierarchy must agree on the tier count, and every
+        # rack must be able to hold a hot task's replica set (the sampler
+        # draws NUM_REPLICAS distinct servers from one rack).
+        if self.true_rates.num_tiers != self.topo.num_tiers:
+            raise ValueError(
+                f"true_rates have {self.true_rates.num_tiers} tiers but the "
+                f"topology has {self.topo.num_tiers}")
+        if self.topo.min_rack_size < loc.NUM_REPLICAS:
+            raise ValueError(
+                f"every rack needs >= {loc.NUM_REPLICAS} servers for "
+                f"hot-rack types; smallest rack has "
+                f"{self.topo.min_rack_size}")
 
 
 def default_config(**kw) -> SimConfig:
@@ -81,22 +93,26 @@ def default_config(**kw) -> SimConfig:
 
 def make_estimates(cfg: SimConfig, mode: str, eps: float, sign: int,
                    seed: int = 0) -> np.ndarray:
-    """(M, 3) estimated rates for one error setting.  sign: -1 lower, +1 higher."""
+    """(M, K) estimated rates for one error setting.  sign: -1 lower, +1 higher.
+
+    "network" scales every non-local tier (the rack/pod/DCN rates) and
+    leaves the local rate exact, generalizing the 3-tier beta/gamma error.
+    """
     m = cfg.topo.num_servers
-    true3 = np.array([cfg.true_rates.alpha, cfg.true_rates.beta,
-                      cfg.true_rates.gamma], np.float32)
+    k = cfg.true_rates.num_tiers
+    true_k = np.asarray(cfg.true_rates.values, np.float32)
     if mode == "uniform":
-        mult = np.full((m, 3), 1.0 + sign * eps, np.float32)
+        mult = np.full((m, k), 1.0 + sign * eps, np.float32)
     elif mode == "network":
-        mult = np.ones((m, 3), np.float32)
-        mult[:, 1] = mult[:, 2] = 1.0 + sign * eps
+        mult = np.ones((m, k), np.float32)
+        mult[:, 1:] = 1.0 + sign * eps
     elif mode == "per_server":
         rng = np.random.default_rng(seed)
-        u = rng.uniform(0.0, eps, size=(m, 3)).astype(np.float32)
+        u = rng.uniform(0.0, eps, size=(m, k)).astype(np.float32)
         mult = 1.0 + sign * u
     else:
         raise ValueError(f"unknown error mode {mode!r}")
-    est = true3[None, :] * mult
+    est = true_k[None, :] * mult
     return np.clip(est, 1e-3, 1.0)
 
 
@@ -111,7 +127,8 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
     policy = make_policy(policy_like)
     topo, true_rates = cfg.topo, cfg.true_rates
     rack_of = jnp.asarray(topo.rack_of, jnp.int32)
-    true3 = true_rates.as_array()
+    ancestors = jnp.asarray(topo.ancestors, jnp.int32)  # (depth, M)
+    true_k = true_rates.as_array()
     sched = wl.compile_schedule(wl.make_scenario(scenario), topo,
                                 cfg.horizon, cfg.p_hot)
     # Little's-law denominator: the offered rate over the measurement
@@ -133,10 +150,10 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             # random numbers).
             types, active = loc.sample_arrivals_at(
                 k_arr, rack_of, lam_total * knobs.lam_mult, knobs.p_hot,
-                knobs.hot_rack, cfg.max_arrivals)
-            true_m3 = true3[None, :] * knobs.rate_mult
+                knobs.hot_rack, cfg.max_arrivals, knobs.rack_weights)
+            true_mk = true_k[None, :] * knobs.rate_mult
             state, compl = policy.slot_step(state, k_algo, types, active,
-                                            est, true_m3, rack_of)
+                                            est, true_mk, ancestors)
             n = policy.num_in_system(state).astype(jnp.float32)
             in_window = (t >= cfg.warmup).astype(jnp.float32)
             n_meas = n_meas + in_window
@@ -147,9 +164,13 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
         carry0 = (init(), jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0))
         (state, mean_n, n_meas, completions), _ = jax.lax.scan(
             step, carry0, jnp.arange(cfg.horizon))
+        # Little's law needs a positive offered rate; lam_total == 0 used
+        # to divide straight to inf — flag it as NaN instead (the host-side
+        # drivers additionally reject negative loads outright).
+        denom = lam_total * lam_scale
         out = {
             "mean_n": mean_n,
-            "mean_delay": mean_n / (lam_total * lam_scale),
+            "mean_delay": jnp.where(denom > 0, mean_n / denom, jnp.nan),
             "throughput": completions / jnp.maximum(n_meas, 1.0),
             "final_n": policy.num_in_system(state).astype(jnp.float32),
         }
@@ -162,7 +183,11 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
 def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
              est: np.ndarray, seed: int = 0,
              scenario: wl.ScenarioLike = None) -> Dict[str, Any]:
-    """Single-configuration run (jit-compiled)."""
+    """Single-configuration run (jit-compiled).  ``lam_total == 0`` yields
+    ``mean_delay = NaN`` (Little's law is undefined); negative loads are
+    rejected here."""
+    if lam_total < 0:
+        raise ValueError(f"lam_total must be >= 0, got {lam_total}")
     run = jax.jit(_build_run(policy, cfg, scenario))
     out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
               jnp.asarray(seed, jnp.uint32))
@@ -174,10 +199,12 @@ def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
           scenario: wl.ScenarioLike = None) -> Dict[str, np.ndarray]:
     """Full cartesian sweep, vmapped: results have shape (L, E, S).
 
-    lam_grid: (L,) loads; est_stack: (E, M, 3); seeds: (S,).  The scenario
+    lam_grid: (L,) loads; est_stack: (E, M, K); seeds: (S,).  The scenario
     schedule is a closure constant — its shapes carry no batch dimension,
     so the whole grid still compiles to one vmapped XLA program.
     """
+    if np.any(np.asarray(lam_grid) < 0):
+        raise ValueError(f"lam_grid must be >= 0, got {lam_grid}")
     run = _build_run(policy, cfg, scenario)
     f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),
                  (0, None, None))

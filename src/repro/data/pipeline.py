@@ -32,8 +32,9 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cluster import ClusterSpec, tier_of
+from repro.core.cluster import tier_of
 from repro.core.estimator import EwmaRateEstimator
+from repro.core.locality import Topology
 from repro.core.policy import make_router
 from repro.workloads import ScenarioLike, host_playback, make_scenario
 
@@ -50,10 +51,15 @@ class PipelineConfig:
     seed: int = 0
     replication: int = 3
     scheduler: str = "balanced_pandas"
-    # mean simulated read service times (steps of the virtual clock)
+    # mean simulated read service rates (reads per virtual-clock unit)
     rate_local: float = 1.0
     rate_rack: float = 0.8
     rate_remote: float = 0.4
+    # K-tier overrides: a full `locality.Topology` for the host fleet
+    # (num_hosts/hosts_per_pod are then derived from it) and a (K,)
+    # tier-rate vector replacing the three rate_* fields.
+    topology: Optional[Topology] = None
+    tier_rates: Optional[Tuple[float, ...]] = None
     # scenario playback (repro.workloads) on the virtual clock: straggler
     # hosts and congestion windows; None -> "static" (multipliers 1.0)
     scenario: ScenarioLike = None
@@ -93,23 +99,34 @@ class DataPipeline:
     def __init__(self, cfg: PipelineConfig,
                  slow_hosts: Optional[Dict[int, float]] = None):
         self.cfg = cfg
-        self.spec = ClusterSpec(cfg.num_hosts, cfg.hosts_per_pod)
-        prior = np.array([cfg.rate_local, cfg.rate_rack, cfg.rate_remote],
-                         np.float32)
-        self.estimator = EwmaRateEstimator(cfg.num_hosts, prior)
-        self.router = make_router(cfg.scheduler, self.spec, prior,
+        # Same unified `Topology` as the JAX side (ClusterSpec retired)
+        self.spec = cfg.topology if cfg.topology is not None else \
+            Topology(cfg.num_hosts, cfg.hosts_per_pod)
+        n_hosts = self.spec.num_servers
+        self.prior = np.asarray(
+            cfg.tier_rates if cfg.tier_rates is not None
+            else (cfg.rate_local, cfg.rate_rack, cfg.rate_remote),
+            np.float32)
+        if self.prior.shape != (self.spec.num_tiers,):
+            raise ValueError(f"pipeline prior has {self.prior.size} tier "
+                             f"rates but the fleet has "
+                             f"{self.spec.num_tiers} tiers")
+        self.estimator = EwmaRateEstimator(n_hosts, self.prior)
+        self.router = make_router(cfg.scheduler, self.spec, self.prior,
                                   estimator=self.estimator, seed=cfg.seed)
         self.slow = slow_hosts or {}
         # Scenario playback over the virtual clock: the same declarative
         # scenarios the simulator and serving engine run, here modelling
         # straggler hosts / congested links during read windows.
         self.playback = host_playback(make_scenario(cfg.scenario),
-                                      cfg.num_hosts, cfg.scenario_horizon)
+                                      n_hosts, cfg.scenario_horizon,
+                                      num_tiers=self.spec.num_tiers)
         self.rng = np.random.default_rng(cfg.seed + 1)
         self._clock = 0.0
         self.metrics = {"local": 0, "rack": 0, "remote": 0,
                         "reads": 0, "virtual_time": 0.0,
-                        "host_reads": np.zeros(cfg.num_hosts, np.int64)}
+                        "tier_reads": np.zeros(self.spec.num_tiers, np.int64),
+                        "host_reads": np.zeros(n_hosts, np.int64)}
         self._chunk_order = np.random.default_rng(cfg.seed + 2).permutation(
             cfg.num_chunks)
         self._cursor = 0  # chunk index
@@ -117,24 +134,29 @@ class DataPipeline:
 
     # -- scheduling ---------------------------------------------------------
     def _read_chunk(self, chunk_id: int) -> np.ndarray:
-        locs = chunk_replicas(chunk_id, self.cfg.num_hosts,
+        locs = chunk_replicas(chunk_id, self.spec.num_servers,
                               self.cfg.replication, self.cfg.seed)
         decision = self.router.route(locs)
         # Deferred-assignment routers (global queue) pick the host only at
         # claim time; the synchronous pipeline stands in for "whichever host
         # goes idle next" with a uniform draw.
         host = decision.worker if not decision.deferred \
-            else int(self.rng.integers(self.cfg.num_hosts))
+            else int(self.rng.integers(self.spec.num_servers))
         tier = tier_of(self.spec, locs, host)
-        rate = [self.cfg.rate_local, self.cfg.rate_rack,
-                self.cfg.rate_remote][tier]
+        rate = float(self.prior[tier])
         rate *= self.slow.get(host, 1.0)
         rate *= self.playback.rate_mult_at(self._clock, host, tier)
         service = float(self.rng.exponential(1.0 / max(rate, 1e-6)))
         self._clock += service
         self.router.claim(host)  # drain the queued task (read runs now)
         self.router.on_complete(host, tier, service)
-        self.metrics[("local", "rack", "remote")[tier]] += 1
+        # legacy 3-way counters: "remote" is the last tier (so a 2-tier
+        # fleet counts non-local reads as remote, not rack); intermediate
+        # tiers (rack, pod, ...) aggregate under "rack"
+        key = "local" if tier == 0 else (
+            "remote" if tier == self.spec.num_tiers - 1 else "rack")
+        self.metrics[key] += 1
+        self.metrics["tier_reads"][tier] += 1
         self.metrics["reads"] += 1
         self.metrics["virtual_time"] = self._clock
         self.metrics["host_reads"][host] += 1

@@ -2,9 +2,12 @@
 
 The MaxWeight baseline's hot loop: each of B idle servers scans all N queues
 for ``argmax_n w(m,n) * Q_n`` where the weight depends on server/queue
-identity and rack co-membership.  Same tiling/accumulator structure as
-wwl_route (see that module for the TPU-adaptation rationale), with a masked
-max-reduction instead of min and the empty-queue mask folded in.
+identity and the deepest hierarchy level the pair shares — derived from the
+``(depth, .)`` ancestor tables (`Topology.ancestors`), with the depth loop
+unrolled at trace time so the K=3 instance lowers to exactly one rack
+comparison.  Same tiling/accumulator structure as wwl_route (see that
+module for the TPU-adaptation rationale), with a masked max-reduction
+instead of min and the empty-queue mask folded in.
 """
 
 from __future__ import annotations
@@ -18,17 +21,17 @@ from jax.experimental import pallas as pl
 NEG_INF = -3.0e38
 
 
-def _claim_kernel(queues_ref, qrack_ref, idle_ref, irack_ref, rates_ref,
-                  score_ref, queue_ref, *, block_n: int):
+def _claim_kernel(queues_ref, qanc_ref, idle_ref, ianc_ref, rates_ref,
+                  score_ref, queue_ref, *, block_n: int, depth: int):
     """One (idle-server-block, queue-block) tile.
 
-    queues_ref: (bn,)   f32  queue lengths of this block
-    qrack_ref:  (bn,)   i32  rack of each queue's owner
-    idle_ref:   (bb,)   i32  idle server ids
-    irack_ref:  (bb,)   i32  idle server racks
-    rates_ref:  (bb, 3) f32  per-idle-server estimated rates
-    score_ref:  (bb,)   f32  running max score (output, revisited)
-    queue_ref:  (bb,)   i32  running argmax    (output, revisited)
+    queues_ref: (bn,)      f32  queue lengths of this block
+    qanc_ref:   (D, bn)    i32  ancestor table of each queue's owner
+    idle_ref:   (bb,)      i32  idle server ids
+    ianc_ref:   (D, bb)    i32  ancestor table of each idle server
+    rates_ref:  (bb, K)    f32  per-idle-server estimated tier rates
+    score_ref:  (bb,)      f32  running max score (output, revisited)
+    queue_ref:  (bb,)      i32  running argmax    (output, revisited)
     """
     j = pl.program_id(1)
 
@@ -38,18 +41,21 @@ def _claim_kernel(queues_ref, qrack_ref, idle_ref, irack_ref, rates_ref,
         queue_ref[...] = jnp.zeros_like(queue_ref)
 
     q = queues_ref[...]
-    qrack = qrack_ref[...]
     idle = idle_ref[...]
-    irack = irack_ref[...]
     rates = rates_ref[...]
 
     bb, bn = idle.shape[0], q.shape[0]
     qid = j * block_n + jax.lax.broadcasted_iota(jnp.int32, (bb, bn), 1)
 
     is_self = qid == idle[:, None]
-    same_rack = jnp.broadcast_to(qrack[None, :], (bb, bn)) == irack[:, None]
-    w = jnp.where(is_self, rates[:, 0:1],
-                  jnp.where(same_rack, rates[:, 1:2], rates[:, 2:3]))
+    # remote weight by default; sharpen level by level, deepest first
+    w = jnp.broadcast_to(rates[:, depth + 1:depth + 2], (bb, bn))
+    for lvl in range(depth - 1, -1, -1):
+        qrow = qanc_ref[lvl, :]                # (bn,)
+        irow = ianc_ref[lvl, :]                # (bb,)
+        share = jnp.broadcast_to(qrow[None, :], (bb, bn)) == irow[:, None]
+        w = jnp.where(share, rates[:, lvl + 1:lvl + 2], w)
+    w = jnp.where(is_self, rates[:, 0:1], w)
     score = jnp.where(q[None, :] > 0, w * q[None, :], NEG_INF)
 
     blk_max = jnp.max(score, axis=1)
@@ -63,27 +69,30 @@ def _claim_kernel(queues_ref, qrack_ref, idle_ref, irack_ref, rates_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_idle", "block_queues",
                                              "interpret"))
-def maxweight_claim_pallas(queues: jnp.ndarray, queue_rack: jnp.ndarray,
-                           idle_servers: jnp.ndarray, idle_rack: jnp.ndarray,
+def maxweight_claim_pallas(queues: jnp.ndarray, queue_anc: jnp.ndarray,
+                           idle_servers: jnp.ndarray, idle_anc: jnp.ndarray,
                            est_rates: jnp.ndarray, *, block_idle: int = 128,
                            block_queues: int = 512, interpret: bool = False):
     """Padded, tiled argmax claims.  See ref.maxweight_claim for semantics.
-    Padding queues must carry Q=0 (masked), padding idle rows are sliced off
-    by ops.maxweight_claim."""
+    queue_anc (depth, N) / idle_anc (depth, B) are ancestor tables;
+    est_rates (B, depth + 2).  Padding queues must carry Q=0 (masked),
+    padding idle rows are sliced off by ops.maxweight_claim."""
     b = idle_servers.shape[0]
     n = queues.shape[0]
+    depth = queue_anc.shape[0]
     grid = (b // block_idle, n // block_queues)
 
-    kernel = functools.partial(_claim_kernel, block_n=block_queues)
+    kernel = functools.partial(_claim_kernel, block_n=block_queues,
+                               depth=depth)
     score, queue = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_queues,), lambda i, j: (j,)),
-            pl.BlockSpec((block_queues,), lambda i, j: (j,)),
+            pl.BlockSpec((depth, block_queues), lambda i, j: (0, j)),
             pl.BlockSpec((block_idle,), lambda i, j: (i,)),
-            pl.BlockSpec((block_idle,), lambda i, j: (i,)),
-            pl.BlockSpec((block_idle, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((depth, block_idle), lambda i, j: (0, i)),
+            pl.BlockSpec((block_idle, depth + 2), lambda i, j: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_idle,), lambda i, j: (i,)),
@@ -94,7 +103,7 @@ def maxweight_claim_pallas(queues: jnp.ndarray, queue_rack: jnp.ndarray,
             jax.ShapeDtypeStruct((b,), jnp.int32),
         ],
         interpret=interpret,
-    )(queues.astype(jnp.float32), queue_rack.astype(jnp.int32),
-      idle_servers.astype(jnp.int32), idle_rack.astype(jnp.int32),
+    )(queues.astype(jnp.float32), queue_anc.astype(jnp.int32),
+      idle_servers.astype(jnp.int32), idle_anc.astype(jnp.int32),
       est_rates.astype(jnp.float32))
     return queue, score

@@ -36,43 +36,74 @@ def _pad_to(x: jnp.ndarray, mult: int, axis: int, value):
     return jnp.pad(x, widths, constant_values=value)
 
 
-def wwl_route(workload, est_rates, server_rack, task_locals, *,
+def _dilate_depth0(est, ids):
+    """Depth-0 (K=2) fleets reach the kernels as a synthetic depth-1 table
+    whose groups are the server ids themselves (share <=> local, which the
+    local override supersedes) with the remote rate duplicated into the
+    unused middle column; callers remap nonzero tiers back to 1."""
+    anc = jnp.asarray(ids, jnp.int32)[None, :]
+    est = jnp.concatenate([est[:, :1], est[:, 1:2], est[:, 1:2]], axis=1)
+    return anc, est
+
+
+def wwl_route(workload, est_rates, server_anc, task_locals, *,
               block_tasks: int = 128, block_servers: int = 512,
               interpret: bool | None = None):
     """Batched Balanced-PANDAS routing. See ref.wwl_route for semantics.
 
-    Accepts arbitrary B, M; pads internally (padding servers get +inf
-    workload and rate 1 so they never win the argmin).
+    `server_anc` is the (depth, M) `Topology.ancestors` table (a legacy
+    (M,) rack map is accepted).  Accepts arbitrary B, M; pads internally
+    (padding servers get +inf workload and rate 1 so they never win the
+    argmin; their pad ancestor ids collide only with each other).
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     b, m = task_locals.shape[0], workload.shape[0]
+    anc = jnp.asarray(server_anc, jnp.int32)
+    anc = anc[None, :] if anc.ndim == 1 else anc
+    er = jnp.asarray(est_rates, jnp.float32)
+    k2 = anc.shape[0] == 0
+    if k2:
+        anc, er = _dilate_depth0(er, jnp.arange(m))
     bs = min(block_servers, _round_up(m, 128))
     bt = min(block_tasks, _round_up(b, 8))
     wl = _pad_to(jnp.asarray(workload, jnp.float32), bs, 0, np.float32(3e38))
-    er = _pad_to(jnp.asarray(est_rates, jnp.float32), bs, 0, 1.0)
-    sr = _pad_to(jnp.asarray(server_rack, jnp.int32), bs, 0, np.int32(2**30))
+    er = _pad_to(er, bs, 0, 1.0)
+    sa = _pad_to(anc, bs, 1, np.int32(2**30))
     tl = _pad_to(jnp.asarray(task_locals, jnp.int32), bt, 0, 0)
     server, tier, score = _wwl.wwl_route_pallas(
-        wl, er, sr, tl, block_tasks=bt, block_servers=bs, interpret=interpret)
-    return server[:b], tier[:b], score[:b]
+        wl, er, sa, tl, block_tasks=bt, block_servers=bs, interpret=interpret)
+    server, tier, score = server[:b], tier[:b], score[:b]
+    if k2:
+        tier = jnp.minimum(tier, 1)  # collapse the synthetic level
+    return server, tier, score
 
 
-def maxweight_claim(queues, queue_rack, idle_servers, idle_rack, est_rates, *,
+def maxweight_claim(queues, queue_anc, idle_servers, idle_anc, est_rates, *,
                     block_idle: int = 128, block_queues: int = 512,
                     interpret: bool | None = None):
-    """Batched JSQ-MaxWeight claims. See ref.maxweight_claim. Padding queues
-    carry Q=0 (masked out); padding idle rows sliced off."""
+    """Batched JSQ-MaxWeight claims. See ref.maxweight_claim.  Ancestor
+    tables are (depth, N)/(depth, B) (legacy rack maps accepted).  Padding
+    queues carry Q=0 (masked out); padding idle rows sliced off."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     b, n = idle_servers.shape[0], queues.shape[0]
+    qa = jnp.asarray(queue_anc, jnp.int32)
+    qa = qa[None, :] if qa.ndim == 1 else qa
+    ia = jnp.asarray(idle_anc, jnp.int32)
+    ia = ia[None, :] if ia.ndim == 1 else ia
+    ids = jnp.asarray(idle_servers, jnp.int32)
+    er = jnp.asarray(est_rates, jnp.float32)
+    if qa.shape[0] == 0:  # depth-0 (K=2) fleet
+        qa = jnp.arange(n, dtype=jnp.int32)[None, :]
+        ia, er = _dilate_depth0(er, ids)
     bq = min(block_queues, _round_up(n, 128))
     bi = min(block_idle, _round_up(b, 8))
     q = _pad_to(jnp.asarray(queues, jnp.float32), bq, 0, 0.0)
-    qr = _pad_to(jnp.asarray(queue_rack, jnp.int32), bq, 0, np.int32(2**30))
-    ids = _pad_to(jnp.asarray(idle_servers, jnp.int32), bi, 0, 0)
-    ir = _pad_to(jnp.asarray(idle_rack, jnp.int32), bi, 0, np.int32(2**30 - 1))
-    er = _pad_to(jnp.asarray(est_rates, jnp.float32), bi, 0, 1.0)
+    qa = _pad_to(qa, bq, 1, np.int32(2**30))
+    ids = _pad_to(ids, bi, 0, 0)
+    ia = _pad_to(ia, bi, 1, np.int32(2**30 - 1))
+    er = _pad_to(er, bi, 0, 1.0)
     queue, score = _mw.maxweight_claim_pallas(
-        q, qr, ids, ir, er, block_idle=bi, block_queues=bq,
+        q, qa, ids, ia, er, block_idle=bi, block_queues=bq,
         interpret=interpret)
     return queue[:b], score[:b]
 

@@ -13,29 +13,43 @@ import jax.numpy as jnp
 
 # ------------------------------------------------------------- wwl_route ---
 
+def _as_anc(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalize a legacy (M,)/(B,) rack map to a (depth, ...) table."""
+    a = jnp.asarray(x)
+    return a[None] if a.ndim == 1 else a
+
+
 def wwl_route(workload: jnp.ndarray, est_rates: jnp.ndarray,
-              server_rack: jnp.ndarray, task_locals: jnp.ndarray):
+              server_anc: jnp.ndarray, task_locals: jnp.ndarray):
     """Batched Balanced-PANDAS routing against a workload snapshot.
 
     workload:    (M,)   f32  estimated weighted workload per server
-    est_rates:   (M,3)  f32  per-server estimated (alpha, beta, gamma)
-    server_rack: (M,)   i32  rack id per server
+    est_rates:   (M,K)  f32  per-server estimated tier rates (fastest first)
+    server_anc:  (D,M)  i32  ancestor-group id per (level, server) — the
+                             `Topology.ancestors` table; a legacy (M,)
+                             rack map is accepted (D = 1, K = 3)
     task_locals: (B,3)  i32  local servers per task
 
-    Returns (server (B,) i32, tier (B,) i32 in {0 local,1 rack,2 remote},
-    score (B,) f32).  Ties break to the lowest server index (deterministic;
-    the sequential simulator keeps the paper's random tie-breaking).
+    Returns (server (B,) i32, tier (B,) i32 in 0..K-1 (0 local, K-1
+    remote), score (B,) f32).  Ties break to the lowest server index
+    (deterministic; the sequential simulator keeps the paper's random
+    tie-breaking).
     """
-    m = workload.shape[0]
+    anc = _as_anc(server_anc)
+    d, m = anc.shape
     sid = jnp.arange(m, dtype=task_locals.dtype)
     local = jnp.any(sid[None, :, None] == task_locals[:, None, :], axis=-1)
-    task_racks = server_rack[task_locals]  # (B,3)
-    rack = jnp.any(server_rack[None, :, None] == task_racks[:, None, :],
-                   axis=-1) & ~local
-    tier = jnp.where(local, 0, jnp.where(rack, 1, 2)).astype(jnp.int32)
-    rate = jnp.where(local, est_rates[None, :, 0],
-                     jnp.where(rack, est_rates[None, :, 1],
-                               est_rates[None, :, 2]))
+    tier = jnp.full(local.shape, d + 1, jnp.int32)
+    rate = jnp.broadcast_to(est_rates[None, :, d + 1], local.shape)
+    for lvl in range(d - 1, -1, -1):
+        row = anc[lvl]
+        task_groups = row[task_locals]  # (B, 3)
+        share = jnp.any(row[None, :, None] == task_groups[:, None, :],
+                        axis=-1)
+        tier = jnp.where(share, lvl + 1, tier)
+        rate = jnp.where(share, est_rates[None, :, lvl + 1], rate)
+    tier = jnp.where(local, 0, tier)
+    rate = jnp.where(local, est_rates[None, :, 0], rate)
     score = workload[None, :] / rate  # (B, M)
     server = jnp.argmin(score, axis=1).astype(jnp.int32)
     b = jnp.arange(task_locals.shape[0])
@@ -44,26 +58,30 @@ def wwl_route(workload: jnp.ndarray, est_rates: jnp.ndarray,
 
 # ------------------------------------------------------------- maxweight ---
 
-def maxweight_claim(queues: jnp.ndarray, queue_rack: jnp.ndarray,
-                    idle_servers: jnp.ndarray, idle_rack: jnp.ndarray,
+def maxweight_claim(queues: jnp.ndarray, queue_anc: jnp.ndarray,
+                    idle_servers: jnp.ndarray, idle_anc: jnp.ndarray,
                     est_rates: jnp.ndarray):
     """Batched JSQ-MaxWeight claim scoring against a queue snapshot.
 
-    queues:       (N,)  f32/i32 queue lengths
-    queue_rack:   (N,)  i32     rack of each queue's owner
-    idle_servers: (B,)  i32     ids of idle servers
-    idle_rack:    (B,)  i32     rack of each idle server
-    est_rates:    (B,3) f32     estimated rates per idle server
+    queues:       (N,)   f32/i32 queue lengths
+    queue_anc:    (D,N)  i32     ancestor table of each queue's owner
+    idle_servers: (B,)   i32     ids of idle servers
+    idle_anc:     (D,B)  i32     ancestor table of each idle server
+    est_rates:    (B,K)  f32     estimated tier rates per idle server
 
-    Returns (queue (B,) i32, score (B,) f32): argmax_n w(m,n) * Q_n with
-    empty queues masked to -inf.  Lowest-index tie-break.
+    Legacy (N,)/(B,) rack maps are accepted (D = 1, K = 3).  Returns
+    (queue (B,) i32, score (B,) f32): argmax_n w(m,n) * Q_n with empty
+    queues masked to -inf.  Lowest-index tie-break.
     """
-    n = queues.shape[0]
+    q_anc, i_anc = _as_anc(queue_anc), _as_anc(idle_anc)
+    d, n = q_anc.shape
     qid = jnp.arange(n, dtype=idle_servers.dtype)
     is_self = idle_servers[:, None] == qid[None, :]
-    same_rack = idle_rack[:, None] == queue_rack[None, :]
-    w = jnp.where(is_self, est_rates[:, 0:1],
-                  jnp.where(same_rack, est_rates[:, 1:2], est_rates[:, 2:3]))
+    w = jnp.broadcast_to(est_rates[:, d + 1:d + 2], is_self.shape)
+    for lvl in range(d - 1, -1, -1):
+        share = i_anc[lvl][:, None] == q_anc[lvl][None, :]
+        w = jnp.where(share, est_rates[:, lvl + 1:lvl + 2], w)
+    w = jnp.where(is_self, est_rates[:, 0:1], w)
     score = jnp.where(queues[None, :] > 0, w * queues[None, :], -jnp.inf)
     queue = jnp.argmax(score, axis=1).astype(jnp.int32)
     b = jnp.arange(idle_servers.shape[0])

@@ -2,16 +2,21 @@
 
 At fleet scale the scheduler's hot loop is, per tick: for each of B arriving
 tasks, find ``argmin_m W_m / rate(m, task)`` over M servers, where the rate
-tier (local / rack-local / remote) is derived from the task's 3 replica
-holders and the rack map.  B and M both reach 10^4-10^5, so the (B, M) score
-matrix never fits VMEM at once — we tile it.
+tier (local / rack-local / pod-local / ... / remote) is derived from the
+task's 3 replica holders and a ``(depth, M)`` **ancestor table** (row l =
+each server's group id at hierarchy level l — `Topology.ancestors`).  B and
+M both reach 10^4-10^5, so the (B, M) score matrix never fits VMEM at once —
+we tile it.
 
 TPU adaptation (vs. the CPU/host scheduler the paper assumes): this is a
 VPU-bound masked reduction, not a matmul, so the MXU is idle; what matters is
 (a) 8x128-aligned tiles, (b) streaming the server axis through VMEM while
 keeping a running (min, argmin) accumulator per task row, and (c) deriving
-the locality tier on the fly from 3 integer comparisons per (task, server)
-pair instead of materializing a (B, M) tier matrix in HBM.
+the locality tier on the fly from 3 x depth integer comparisons per
+(task, server) pair — the depth loop is unrolled at trace time (depth is a
+static shape), so the K=3 instance lowers to exactly the one rack
+comparison the seed shipped — instead of materializing a (B, M) tier
+matrix in HBM.
 
 Grid: (B/bt, M/bm) with the server axis innermost.  Accumulators live in the
 output block (revisited across the inner dimension — standard Pallas
@@ -33,18 +38,19 @@ from jax.experimental import pallas as pl
 NEG_LARGE = 3.0e38
 
 
-def _route_kernel(workload_ref, rates_ref, rack_ref, locals_ref, lrack_ref,
-                  score_ref, server_ref, tier_ref, *, block_m: int):
+def _route_kernel(workload_ref, rates_ref, anc_ref, locals_ref, lanc_ref,
+                  score_ref, server_ref, tier_ref, *, block_m: int,
+                  depth: int):
     """One (task-block, server-block) tile.
 
-    workload_ref: (bm,)   f32   workload slice of this server block
-    rates_ref:    (bm, 3) f32   est rates slice
-    rack_ref:     (bm,)   i32   rack ids of this server block
-    locals_ref:   (bt, 3) i32   task local servers
-    lrack_ref:    (bt, 3) i32   racks of those locals
-    score_ref:    (bt,)   f32   running min score     (output, revisited)
-    server_ref:   (bt,)   i32   running argmin server (output, revisited)
-    tier_ref:     (bt,)   i32   tier at argmin        (output, revisited)
+    workload_ref: (bm,)        f32   workload slice of this server block
+    rates_ref:    (bm, K)      f32   est tier rates slice (K = depth + 2)
+    anc_ref:      (D, bm)      i32   ancestor table slice of this block
+    locals_ref:   (bt, 3)      i32   task local servers
+    lanc_ref:     (bt, D, 3)   i32   ancestor groups of those locals
+    score_ref:    (bt,)        f32   running min score     (output, revisited)
+    server_ref:   (bt,)        i32   running argmin server (output, revisited)
+    tier_ref:     (bt,)        i32   tier at argmin        (output, revisited)
     """
     j = pl.program_id(1)
 
@@ -52,26 +58,31 @@ def _route_kernel(workload_ref, rates_ref, rack_ref, locals_ref, lrack_ref,
     def _init():
         score_ref[...] = jnp.full_like(score_ref, NEG_LARGE)
         server_ref[...] = jnp.zeros_like(server_ref)
-        tier_ref[...] = jnp.full_like(tier_ref, 2)
+        tier_ref[...] = jnp.full_like(tier_ref, depth + 1)
 
     w = workload_ref[...]                      # (bm,)
-    rates = rates_ref[...]                     # (bm, 3)
-    rack = rack_ref[...]                       # (bm,)
+    rates = rates_ref[...]                     # (bm, K)
     locs = locals_ref[...]                     # (bt, 3)
-    lracks = lrack_ref[...]                    # (bt, 3)
 
     bt = locs.shape[0]
     bm = w.shape[0]
     sid = j * block_m + jax.lax.broadcasted_iota(jnp.int32, (bt, bm), 1)
 
     local = (sid == locs[:, 0:1]) | (sid == locs[:, 1:2]) | (sid == locs[:, 2:3])
-    rk = jnp.broadcast_to(rack[None, :], (bt, bm))
-    in_rack = ((rk == lracks[:, 0:1]) | (rk == lracks[:, 1:2])
-               | (rk == lracks[:, 2:3]))
-    tier = jnp.where(local, 0, jnp.where(in_rack, 1, 2))  # (bt, bm)
-
-    rate = jnp.where(local, rates[None, :, 0],
-                     jnp.where(in_rack, rates[None, :, 1], rates[None, :, 2]))
+    # remote by default; sharpen tier/rate level by level, deepest first —
+    # the depth loop is unrolled at trace time (static shape)
+    tier = jnp.full((bt, bm), depth + 1, jnp.int32)
+    rate = jnp.broadcast_to(rates[None, :, depth + 1], (bt, bm))
+    for lvl in range(depth - 1, -1, -1):
+        anc_row = anc_ref[lvl, :]              # (bm,)
+        lanc = lanc_ref[...][:, lvl, :]        # (bt, 3)
+        rk = jnp.broadcast_to(anc_row[None, :], (bt, bm))
+        share = ((rk == lanc[:, 0:1]) | (rk == lanc[:, 1:2])
+                 | (rk == lanc[:, 2:3]))
+        tier = jnp.where(share, lvl + 1, tier)
+        rate = jnp.where(share, rates[None, :, lvl + 1], rate)
+    tier = jnp.where(local, 0, tier)
+    rate = jnp.where(local, rates[None, :, 0], rate)
     score = jnp.broadcast_to(w[None, :], (bt, bm)) / rate  # (bt, bm)
 
     blk_min = jnp.min(score, axis=1)                       # (bt,)
@@ -89,30 +100,35 @@ def _route_kernel(workload_ref, rates_ref, rack_ref, locals_ref, lrack_ref,
 @functools.partial(jax.jit, static_argnames=("block_tasks", "block_servers",
                                              "interpret"))
 def wwl_route_pallas(workload: jnp.ndarray, est_rates: jnp.ndarray,
-                     server_rack: jnp.ndarray, task_locals: jnp.ndarray,
+                     server_anc: jnp.ndarray, task_locals: jnp.ndarray,
                      *, block_tasks: int = 128, block_servers: int = 512,
                      interpret: bool = False):
     """Padded, tiled argmin routing.  See ref.wwl_route for semantics.
 
+    server_anc is the (depth, M) ancestor table; est_rates (M, depth + 2).
     Caller guarantees M % block_servers == 0 and B % block_tasks == 0
     (ops.wwl_route pads; padding servers carry +inf workload so they never
     win, padding tasks are sliced off).
     """
     b = task_locals.shape[0]
     m = workload.shape[0]
+    depth = server_anc.shape[0]
     grid = (b // block_tasks, m // block_servers)
-    task_lracks = server_rack[task_locals]  # (B, 3) gather outside the kernel
+    # (B, D, 3) ancestor groups of each task's locals: gathered outside the
+    # kernel (one gather per level, B*D*3 ints — tiny next to (B, M))
+    task_lanc = jnp.swapaxes(server_anc[:, task_locals], 0, 1)
 
-    kernel = functools.partial(_route_kernel, block_m=block_servers)
+    kernel = functools.partial(_route_kernel, block_m=block_servers,
+                               depth=depth)
     score, server, tier = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_servers,), lambda i, j: (j,)),
-            pl.BlockSpec((block_servers, 3), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_servers,), lambda i, j: (j,)),
+            pl.BlockSpec((block_servers, depth + 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((depth, block_servers), lambda i, j: (0, j)),
             pl.BlockSpec((block_tasks, 3), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_tasks, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_tasks, depth, 3), lambda i, j: (i, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_tasks,), lambda i, j: (i,)),
@@ -126,6 +142,6 @@ def wwl_route_pallas(workload: jnp.ndarray, est_rates: jnp.ndarray,
         ],
         interpret=interpret,
     )(workload.astype(jnp.float32), est_rates.astype(jnp.float32),
-      server_rack.astype(jnp.int32), task_locals.astype(jnp.int32),
-      task_lracks.astype(jnp.int32))
+      server_anc.astype(jnp.int32), task_locals.astype(jnp.int32),
+      task_lanc.astype(jnp.int32))
     return server, tier, score

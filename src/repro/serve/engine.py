@@ -43,8 +43,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cluster import ClusterSpec, tier_of
+from repro.core.cluster import tier_of
 from repro.core.estimator import EwmaRateEstimator
+from repro.core.locality import Topology
 from repro.core.policy import make_router
 from repro.data.pipeline import chunk_replicas
 from repro.workloads import (ScenarioLike, Trace, host_playback,
@@ -80,6 +81,11 @@ class EngineConfig:
     rate_local: float = 1.0
     rate_rack: float = 0.7
     rate_remote: float = 0.4
+    # K-tier overrides: a full `locality.Topology` for the replica fleet
+    # (num_replicas/replicas_per_pod are then derived from it) and a (K,)
+    # tier-rate prior replacing the three rate_* fields.
+    topology: Optional[Topology] = None
+    tier_rates: Optional[Sequence[float]] = None
     seed: int = 0
     # scenario playback (repro.workloads): time-varying replica slowdowns
     # on the engine-step clock; None -> "static" (all multipliers 1.0)
@@ -165,27 +171,36 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  slow_replicas: Optional[Dict[int, float]] = None):
         self.cfg, self.ecfg = cfg, ecfg
-        self.spec = ClusterSpec(ecfg.num_replicas, ecfg.replicas_per_pod)
-        prior = np.array([ecfg.rate_local, ecfg.rate_rack, ecfg.rate_remote],
-                         np.float32)
-        self.estimator = EwmaRateEstimator(ecfg.num_replicas, prior)
+        # The fleet layout is the same `Topology` the JAX simulator uses
+        # (the host-only ClusterSpec is retired): K-tier hierarchies run
+        # through the engine unchanged.
+        self.spec = ecfg.topology if ecfg.topology is not None else \
+            Topology(ecfg.num_replicas, ecfg.replicas_per_pod)
+        n_rep = self.spec.num_servers
+        prior = np.asarray(
+            ecfg.tier_rates if ecfg.tier_rates is not None
+            else (ecfg.rate_local, ecfg.rate_rack, ecfg.rate_remote),
+            np.float32)
+        if prior.shape != (self.spec.num_tiers,):
+            raise ValueError(f"engine prior has {prior.size} tier rates but "
+                             f"the fleet has {self.spec.num_tiers} tiers")
+        self.estimator = EwmaRateEstimator(n_rep, prior)
         self.router = make_router(ecfg.scheduler, self.spec, prior,
                                   estimator=self.estimator, seed=ecfg.seed)
-        self.replicas = [Replica(cfg, params, ecfg)
-                         for _ in range(ecfg.num_replicas)]
+        self.replicas = [Replica(cfg, params, ecfg) for _ in range(n_rep)]
         self.queue: deque = deque()            # not-yet-routed arrivals
         self.waiting: List[deque] = [deque()   # routed, awaiting a slot
-                                     for _ in range(ecfg.num_replicas)]
+                                     for _ in range(n_rep)]
         self.pending: deque = deque()          # deferred-assignment (global)
         self.slow = slow_replicas or {}
         # One scenario seam for every scheduler: the playback inflates the
         # observed service times the estimator sees, exactly like the static
         # `slow_replicas` dict but time-varying (stragglers open and close).
         self.playback = host_playback(make_scenario(ecfg.scenario),
-                                      ecfg.num_replicas,
-                                      float(ecfg.scenario_horizon))
+                                      n_rep, float(ecfg.scenario_horizon),
+                                      num_tiers=self.spec.num_tiers)
         self.steps = 0
-        self.assign_tiers = {0: 0, 1: 0, 2: 0}
+        self.assign_tiers = {t: 0 for t in range(self.spec.num_tiers)}
         # engine-step index of every submit, for trace export (recorded_trace)
         self.arrival_log: List[int] = []
 
@@ -210,7 +225,7 @@ class ServingEngine:
     def _route_arrivals(self) -> None:
         while self.queue:
             req = self.queue.popleft()
-            locs = chunk_replicas(req.prefix_id, self.ecfg.num_replicas, 3,
+            locs = chunk_replicas(req.prefix_id, self.spec.num_servers, 3,
                                   self.ecfg.seed)
             req._locs = locs  # type: ignore[attr-defined]
             decision = self.router.route(locs)

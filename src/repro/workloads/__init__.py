@@ -40,3 +40,8 @@ from repro.workloads.trace import (  # noqa: F401
     trace_from_arrivals,
     trace_to_scenario,
 )
+from repro.workloads.ingest import (  # noqa: F401
+    GOOGLE_V2_TASK_EVENT_COLUMNS,
+    load_google_cluster_csv,
+    save_google_cluster_csv,
+)

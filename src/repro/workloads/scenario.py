@@ -10,8 +10,9 @@ exposes:
 
   * arrival-rate modulation (``lam_mult``): diurnal ramps, flash crowds,
     2-state MMPP bursts;
-  * locality drift (``p_hot``, ``hot_rack``): the hot rack migrating or the
-    hot fraction ramping;
+  * locality drift (``p_hot``, ``hot_rack``, ``rack_weights``): the hot
+    rack migrating, the hot fraction ramping, or a full per-rack
+    arrival-weight vector (the K-tier generalization);
   * fault injection into the *true* service rates: per-server straggler
     windows (``slow_servers``) and network congestion that sags whole tiers
     (``tier_mult`` on beta / gamma).
@@ -68,8 +69,18 @@ class Segment:
     lam_mult     -- arrival-rate multiplier applied to the configured load
     p_hot        -- absolute hot-traffic fraction; None keeps the config's
     hot_rack     -- rack receiving the hot traffic (mod num_racks at compile)
-    tier_mult    -- (local, rack, remote) multipliers on the TRUE rates:
-                    network faults (rack-switch congestion sags beta/gamma)
+    rack_weights -- per-rack arrival weights for the skewed traffic: hot
+                    tasks draw their rack from this vector instead of the
+                    single ``hot_rack`` (resized to the topology's rack
+                    count at compile: truncated or cycled).  None keeps
+                    the classic one-hot hot_rack behaviour — and the
+                    bitwise static sample path.
+    tier_mult    -- per-tier multipliers on the TRUE rates: network faults
+                    (rack-switch congestion sags the non-local tiers).
+                    Three values are the classic (local, rack, remote)
+                    spelling — on a deeper topology the remote multiplier
+                    extends to every tier past the rack; a K-length tuple
+                    addresses each tier exactly.
     slow_servers -- {server_id: rate_mult} per-server TRUE-rate multipliers
                     (straggler windows; ids taken mod fleet size at compile)
     """
@@ -78,8 +89,9 @@ class Segment:
     lam_mult: float = 1.0
     p_hot: Optional[float] = None
     hot_rack: int = 0
-    tier_mult: Tuple[float, float, float] = (1.0, 1.0, 1.0)
+    tier_mult: Tuple[float, ...] = (1.0, 1.0, 1.0)
     slow_servers: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    rack_weights: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self):
         if not 0.0 <= self.start < 1.0:
@@ -90,12 +102,18 @@ class Segment:
             raise ValueError(f"p_hot must be in [0, 1], got {self.p_hot}")
         if self.hot_rack < 0:
             raise ValueError(f"hot_rack must be >= 0, got {self.hot_rack}")
-        if len(self.tier_mult) != 3 or any(m <= 0.0 for m in self.tier_mult):
-            raise ValueError(f"tier_mult must be 3 positive values, "
+        if len(self.tier_mult) < 2 or any(m <= 0.0 for m in self.tier_mult):
+            raise ValueError(f"tier_mult must be >= 2 positive values, "
                              f"got {self.tier_mult}")
         if any(v <= 0.0 for v in self.slow_servers.values()):
             raise ValueError(f"slow_servers multipliers must be > 0, "
                              f"got {dict(self.slow_servers)}")
+        if self.rack_weights is not None:
+            w = tuple(float(x) for x in self.rack_weights)
+            if not w or any(x < 0.0 for x in w) or sum(w) <= 0.0:
+                raise ValueError(f"rack_weights must be non-negative with a "
+                                 f"positive sum, got {self.rack_weights}")
+            object.__setattr__(self, "rack_weights", w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,11 +223,46 @@ def make_scenario(spec: ScenarioLike, **options) -> Scenario:
 # ---------------------------------------------------------------------------
 
 
-def _dense_segments(scn: Scenario, num_workers: int, num_racks: int,
-                    base_p_hot: float):
-    """Numpy per-segment arrays: (starts, lam, p_hot, hot_rack, tier, server).
+def _expand_tier_mult(tm: Sequence[float], num_tiers: int) -> Tuple[float, ...]:
+    """Map a segment's tier_mult onto K tiers: exact when lengths match;
+    the classic 3-tuple extends its remote multiplier to every tier past
+    the rack (DCN congestion hits everything beyond the rack switch) and
+    drops the rack entry on a 2-tier fleet."""
+    tm = tuple(float(x) for x in tm)
+    if len(tm) == num_tiers:
+        return tm
+    if len(tm) == 3:
+        if num_tiers > 3:
+            return tm[:2] + (tm[2],) * (num_tiers - 2)
+        if num_tiers == 2:
+            return (tm[0], tm[2])
+    raise ValueError(f"tier_mult {tm} does not fit a {num_tiers}-tier "
+                     f"topology (pass 3 or exactly {num_tiers} values)")
 
-    starts are fractions in [0, 1); tier is (S, 3); server is (S, M).
+
+def _resize_weights(w: Sequence[float], num_racks: int) -> Tuple[float, ...]:
+    """Fit a segment's rack_weights to the compiled rack count: truncate a
+    longer vector, cycle a shorter one (mirroring hot_rack's mod wrap)."""
+    w = tuple(float(x) for x in w)
+    out = tuple(w[i % len(w)] for i in range(num_racks))
+    if sum(out) <= 0.0:
+        raise ValueError(f"rack_weights {w} are all zero over the first "
+                         f"{num_racks} racks")
+    return out
+
+
+def _dense_segments(scn: Scenario, num_workers: int, num_racks: int,
+                    base_p_hot: float, num_tiers: int = 3,
+                    materialize_weights: bool = True):
+    """Numpy per-segment arrays:
+    (starts, lam, p_hot, hot_rack, tier, server, rack_weights).
+
+    starts are fractions in [0, 1); tier is (S, K); server is (S, M);
+    rack_weights is (S, R) — or None when no segment opts into per-rack
+    weights (the bitwise-pinned classic hot_rack path) or the caller
+    does not consume the locality knobs (`materialize_weights=False`,
+    the host projection — weights must not be resized/validated against
+    a rack count the host side does not have).
     """
     s_count = len(scn.segments)
     starts = np.array([s.start for s in scn.segments], np.float64)
@@ -218,12 +271,25 @@ def _dense_segments(scn: Scenario, num_workers: int, num_racks: int,
                       for s in scn.segments], np.float32)
     hot = np.array([s.hot_rack % max(num_racks, 1) for s in scn.segments],
                    np.int32)
-    tier = np.array([s.tier_mult for s in scn.segments], np.float32)
+    tier = np.array([_expand_tier_mult(s.tier_mult, num_tiers)
+                     for s in scn.segments], np.float32)
     server = np.ones((s_count, num_workers), np.float32)
     for i, seg in enumerate(scn.segments):
         for sid, mult in seg.slow_servers.items():
             server[i, sid % num_workers] = mult
-    return starts, lam, p_hot, hot, tier, server
+    if not materialize_weights or \
+            all(s.rack_weights is None for s in scn.segments):
+        weights = None
+    else:
+        # segments without explicit weights keep their hot_rack as one-hot
+        weights = np.zeros((s_count, max(num_racks, 1)), np.float32)
+        for i, seg in enumerate(scn.segments):
+            if seg.rack_weights is None:
+                weights[i, hot[i]] = 1.0
+            else:
+                weights[i] = _resize_weights(seg.rack_weights,
+                                             max(num_racks, 1))
+    return starts, lam, p_hot, hot, tier, server, weights
 
 
 # ---------------------------------------------------------------------------
@@ -233,14 +299,18 @@ def _dense_segments(scn: Scenario, num_workers: int, num_racks: int,
 
 class Schedule(NamedTuple):
     """Compiled scenario: per-segment arrays gathered by slot index inside
-    `lax.scan`.  All shapes are static per scenario (S segments, M servers),
-    so vmapping the simulator over any grid leaves them untouched."""
+    `lax.scan`.  All shapes are static per scenario (S segments, M servers,
+    K tiers), so vmapping the simulator over any grid leaves them
+    untouched.  ``rack_weights`` is None unless some segment opts into
+    per-rack arrival weights — a compile-time (Python) fact, so the
+    classic hot_rack sampling path stays branch-free and bitwise pinned."""
 
     knots: jnp.ndarray      # (S,) int32 first slot of each segment
     lam_mult: jnp.ndarray   # (S,) f32 arrival-rate multiplier
     p_hot: jnp.ndarray      # (S,) f32 absolute hot fraction
     hot_rack: jnp.ndarray   # (S,) int32 rack receiving hot traffic
-    rate_mult: jnp.ndarray  # (S, M, 3) f32 TRUE-rate multiplier per server/tier
+    rate_mult: jnp.ndarray  # (S, M, K) f32 TRUE-rate multiplier per server/tier
+    rack_weights: Optional[jnp.ndarray] = None  # (S, R) f32 arrival weights
 
 
 class SlotKnobs(NamedTuple):
@@ -249,23 +319,28 @@ class SlotKnobs(NamedTuple):
     lam_mult: jnp.ndarray   # () f32
     p_hot: jnp.ndarray      # () f32
     hot_rack: jnp.ndarray   # () int32
-    rate_mult: jnp.ndarray  # (M, 3) f32
+    rate_mult: jnp.ndarray  # (M, K) f32
+    rack_weights: Optional[jnp.ndarray] = None  # (R,) f32 or None
 
 
 def compile_schedule(scn: Scenario, topo, horizon: int,
                      base_p_hot: float) -> Schedule:
-    """Compile a scenario against a `Topology` and a slot horizon."""
-    starts, lam, p_hot, hot, tier, server = _dense_segments(
-        scn, topo.num_servers, topo.num_racks, base_p_hot)
+    """Compile a scenario against a `Topology` and a slot horizon.  The
+    topology fixes both the rack count (hot_rack wrap, rack_weights width)
+    and the tier count K of the rate-multiplier track."""
+    starts, lam, p_hot, hot, tier, server, weights = _dense_segments(
+        scn, topo.num_servers, topo.num_racks, base_p_hot,
+        num_tiers=topo.num_tiers)
     knots = np.floor(starts * horizon).astype(np.int32)
     knots[0] = 0
-    rate = server[:, :, None] * tier[:, None, :]  # (S, M, 3)
+    rate = server[:, :, None] * tier[:, None, :]  # (S, M, K)
     return Schedule(
         knots=jnp.asarray(knots),
         lam_mult=jnp.asarray(lam),
         p_hot=jnp.asarray(p_hot),
         hot_rack=jnp.asarray(hot),
         rate_mult=jnp.asarray(rate),
+        rack_weights=None if weights is None else jnp.asarray(weights),
     )
 
 
@@ -278,7 +353,9 @@ def slot_knobs(sched: Schedule, t: jnp.ndarray) -> SlotKnobs:
     """
     i = jnp.searchsorted(sched.knots, t.astype(jnp.int32), side="right") - 1
     return SlotKnobs(lam_mult=sched.lam_mult[i], p_hot=sched.p_hot[i],
-                     hot_rack=sched.hot_rack[i], rate_mult=sched.rate_mult[i])
+                     hot_rack=sched.hot_rack[i], rate_mult=sched.rate_mult[i],
+                     rack_weights=None if sched.rack_weights is None
+                     else sched.rack_weights[i])
 
 
 def mean_lam_mult_over(sched: Schedule, start_slot: int,
@@ -325,7 +402,7 @@ class HostPlayback:
     horizon: float
     starts: np.ndarray       # (S,) segment start fractions
     lam_mult: np.ndarray     # (S,)
-    tier_mult: np.ndarray    # (S, 3)
+    tier_mult: np.ndarray    # (S, K)
     server_mult: np.ndarray  # (S, M)
 
     def _seg(self, t: float) -> int:
@@ -341,7 +418,7 @@ class HostPlayback:
         locality tier of the work is known)."""
         s = self._seg(t)
         mult = float(self.server_mult[s, worker])
-        if tier is not None and 0 <= tier <= 2:
+        if tier is not None and 0 <= tier < self.tier_mult.shape[1]:
             mult *= float(self.tier_mult[s, tier])
         return mult
 
@@ -351,18 +428,20 @@ class HostPlayback:
         return 1.0 / max(self.rate_mult_at(t, worker, tier), 1e-6)
 
 
-def host_playback(scn: Scenario, num_workers: int,
-                  horizon: float) -> HostPlayback:
-    """Project a scenario to host-side numpy playback over `num_workers`.
+def host_playback(scn: Scenario, num_workers: int, horizon: float,
+                  num_tiers: int = 3) -> HostPlayback:
+    """Project a scenario to host-side numpy playback over `num_workers`
+    with `num_tiers` locality tiers (the fleet Topology's ``num_tiers``).
 
     Host consumers (engine, pipeline, benches) place work by rendezvous
     hashing, so only the arrival-rate and fault tracks are materialized —
-    the locality knobs (p_hot / hot_rack) are simulator-only.
+    the locality knobs (p_hot / hot_rack / rack_weights) are simulator-only.
     """
     if not (isinstance(horizon, numbers.Real) and horizon > 0):
         raise ValueError(f"playback horizon must be > 0, got {horizon}")
-    starts, lam, _p_hot, _hot, tier, server = _dense_segments(
-        scn, num_workers, num_racks=1, base_p_hot=0.5)
+    starts, lam, _p_hot, _hot, tier, server, _w = _dense_segments(
+        scn, num_workers, num_racks=1, base_p_hot=0.5, num_tiers=num_tiers,
+        materialize_weights=False)
     return HostPlayback(horizon=float(horizon), starts=starts, lam_mult=lam,
                         tier_mult=tier, server_mult=server)
 

@@ -119,12 +119,16 @@ class Trace:
     seconds, each carrying an arrival count and optional key-skew
     annotations, plus incident windows.
 
-    arrivals -- (N,) per-interval arrival counts (>= 0; any real scale —
-                the compiler normalizes to unit mean)
-    p_hot    -- optional (N,) hot-traffic fraction per interval; keep the
-                values quantized to a few levels (every distinct value
-                starts a new segment that merging must preserve)
-    hot_rack -- optional (N,) rack receiving the hot traffic
+    arrivals     -- (N,) per-interval arrival counts (>= 0; any real scale —
+                    the compiler normalizes to unit mean)
+    p_hot        -- optional (N,) hot-traffic fraction per interval; keep the
+                    values quantized to a few levels (every distinct value
+                    starts a new segment that merging must preserve)
+    hot_rack     -- optional (N,) rack receiving the hot traffic
+    rack_weights -- optional (N, R) per-rack arrival weights (the
+                    many-rack generalization of hot_rack: the skewed
+                    traffic draws its rack from this vector); quantize to
+                    a few distinct rows, like p_hot
     """
 
     name: str
@@ -133,6 +137,7 @@ class Trace:
     p_hot: Optional[np.ndarray] = None
     hot_rack: Optional[np.ndarray] = None
     incidents: Tuple[Incident, ...] = ()
+    rack_weights: Optional[np.ndarray] = None
 
     def __post_init__(self):
         arr = np.asarray(self.arrivals, np.float64)
@@ -161,6 +166,16 @@ class Trace:
             if (hr < 0).any():
                 raise ValueError("hot_rack ids must be >= 0")
             object.__setattr__(self, "hot_rack", hr)
+        if self.rack_weights is not None:
+            rw = np.asarray(self.rack_weights, np.float64)
+            if rw.ndim != 2 or rw.shape[0] != n or rw.shape[1] < 1:
+                raise ValueError(f"rack_weights must have shape ({n}, R), "
+                                 f"got {rw.shape}")
+            if not np.isfinite(rw).all() or (rw < 0).any() or \
+                    (rw.sum(axis=1) <= 0).any():
+                raise ValueError("rack_weights rows must be non-negative "
+                                 "with positive sums")
+            object.__setattr__(self, "rack_weights", rw)
         for inc in self.incidents:
             if inc.end > n:
                 raise ValueError(f"incident [{inc.start}, {inc.end}) runs "
@@ -188,6 +203,7 @@ class Trace:
                 and arr_eq(self.arrivals, other.arrivals)
                 and arr_eq(self.p_hot, other.p_hot)
                 and arr_eq(self.hot_rack, other.hot_rack)
+                and arr_eq(self.rack_weights, other.rack_weights)
                 and self.incidents == other.incidents)
 
 
@@ -204,6 +220,9 @@ def save_trace(trace: Trace, path: Union[str, Path]) -> Path:
     if path.suffix == ".csv":
         if trace.incidents:
             raise ValueError("CSV traces cannot carry incident records; "
+                             "save as .jsonl instead")
+        if trace.rack_weights is not None:
+            raise ValueError("CSV traces cannot carry rack_weights vectors; "
                              "save as .jsonl instead")
         cols = ["arrivals"]
         if trace.p_hot is not None:
@@ -233,6 +252,8 @@ def save_trace(trace: Trace, path: Union[str, Path]) -> Path:
                 rec["p_hot"] = _num(trace.p_hot[i])
             if trace.hot_rack is not None:
                 rec["hot_rack"] = int(trace.hot_rack[i])
+            if trace.rack_weights is not None:
+                rec["rack_weights"] = [_num(w) for w in trace.rack_weights[i]]
             f.write(json.dumps(rec) + "\n")
         for inc in trace.incidents:
             rec = {"record": "incident", "kind": inc.kind,
@@ -268,6 +289,7 @@ def _load_jsonl(path: Path) -> Trace:
     arrivals: List[float] = []
     p_hot: List[float] = []
     hot_rack: List[int] = []
+    rack_weights: List[List[float]] = []
     incidents: List[Incident] = []
     with open(path) as f:
         for ln, line in enumerate(f, 1):
@@ -292,6 +314,9 @@ def _load_jsonl(path: Path) -> Trace:
                     p_hot.append(float(rec["p_hot"]))
                 if "hot_rack" in rec:
                     hot_rack.append(int(rec["hot_rack"]))
+                if "rack_weights" in rec:
+                    rack_weights.append(
+                        [float(w) for w in rec["rack_weights"]])
             elif kind == "incident":
                 incidents.append(Incident(
                     kind=rec["kind"], start=int(rec["start"]),
@@ -309,11 +334,17 @@ def _load_jsonl(path: Path) -> Trace:
         raise ValueError(f"{path}: hot_rack must be annotated on all "
                          f"intervals or none "
                          f"({len(hot_rack)}/{len(arrivals)} annotated)")
+    if rack_weights and len(rack_weights) != len(arrivals):
+        raise ValueError(f"{path}: rack_weights must be annotated on all "
+                         f"intervals or none "
+                         f"({len(rack_weights)}/{len(arrivals)} annotated)")
     return Trace(name=name, interval=interval,
                  arrivals=np.asarray(arrivals, np.float64),
                  p_hot=np.asarray(p_hot, np.float64) if p_hot else None,
                  hot_rack=np.asarray(hot_rack, np.int64) if hot_rack else None,
-                 incidents=tuple(incidents))
+                 incidents=tuple(incidents),
+                 rack_weights=(np.asarray(rack_weights, np.float64)
+                               if rack_weights else None))
 
 
 def _load_csv(path: Path) -> Trace:
@@ -372,6 +403,8 @@ def _interval_knobs(trace: Trace):
             0 if trace.hot_rack is None else int(trace.hot_rack[i]),
             tuple(float(m) for m in tier[i]),
             tuple(sorted(slow[i].items())),
+            None if trace.rack_weights is None
+            else tuple(float(w) for w in trace.rack_weights[i]),
         ))
     return keys
 
@@ -450,14 +483,15 @@ def trace_to_scenario(trace: Trace, max_segments: int = 64,
     bounds = starts + [n]
     segments = []
     for a, b in zip(bounds, bounds[1:]):
-        p_hot, hot_rack, tier, slow = keys[a]
+        p_hot, hot_rack, tier, slow, weights = keys[a]
         segments.append(Segment(
             start=a / n,
             lam_mult=float(lam[a:b].mean()),
             p_hot=p_hot,
             hot_rack=hot_rack,
             tier_mult=tier,
-            slow_servers=dict(slow)))
+            slow_servers=dict(slow),
+            rack_weights=weights))
     return Scenario(f"trace:{trace.name}", tuple(segments))
 
 

@@ -30,37 +30,37 @@ def test_pandas_routes_to_min_weighted_workload():
     s = bp.init_state(TOPO)
     # Uniform base workload (W=4 everywhere) so the rate division
     # differentiates tiers; overload server 0 so it is never picked.
-    s = s._replace(q_local=jnp.full((12,), 2, jnp.int32).at[0].set(10))
+    # Queue matrix columns: 0 local, 1 rack-local, 2 remote.
+    s = s._replace(q=s.q.at[:, 0].set(2).at[0, 0].set(10))
     task = jnp.array([0, 1, 2], jnp.int32)
     s2 = bp.route_one(s, jax.random.PRNGKey(0), task, jnp.bool_(True), EST,
                       RACK_OF)
     # Scores: server 0: (10/.5)/.5=40; locals 1,2: (2/.5)/.5=8;
     # rack-local 3: 4/.45=8.9; remotes: 4/.25=16 -> join 1 or 2 (local).
-    assert int(s2.q_local[0]) == 10
-    assert int(s2.q_local[1] + s2.q_local[2]) == 5  # 2+2 base + 1 arrival
+    assert int(s2.q[0, 0]) == 10
+    assert int(s2.q[1, 0] + s2.q[2, 0]) == 5  # 2+2 base + 1 arrival
 
 
 def test_pandas_remote_routing_when_locals_swamped():
     s = bp.init_state(TOPO)
     # All rack-0/1 servers (locals + rack-locals) swamped; remotes empty.
-    q = s.q_local.at[:8].set(100)
-    s = s._replace(q_local=q)
+    s = s._replace(q=s.q.at[:8, 0].set(100))
     task = jnp.array([0, 1, 4], jnp.int32)  # locals in racks 0 and 1
     s2 = bp.route_one(s, jax.random.PRNGKey(0), task, jnp.bool_(True), EST,
                       RACK_OF)
-    assert int(jnp.sum(s2.q_remote[8:])) == 1  # went remote to rack 2
+    assert int(jnp.sum(s2.q[8:, 2])) == 1  # went remote to rack 2
 
 
 def test_pandas_scheduling_priority_order():
     s = bp.init_state(TOPO)
-    s = s._replace(q_rack=s.q_rack.at[3].set(1), q_remote=s.q_remote.at[3].set(1))
+    s = s._replace(q=s.q.at[3, 1].set(1).at[3, 2].set(1))
     types = jnp.zeros((1, 3), jnp.int32)
     active = jnp.zeros((1,), bool)
     s2, _ = bp.slot_step(s, jax.random.PRNGKey(0), types, active, EST, TRUE3,
                          RACK_OF)
     # Idle server 3 must pick the rack-local task first.
     assert int(s2.serving[3]) == loc.RACK_LOCAL
-    assert int(s2.q_rack[3]) == 0 and int(s2.q_remote[3]) == 1
+    assert int(s2.q[3, 1]) == 0 and int(s2.q[3, 2]) == 1
 
 
 def test_pandas_conservation_and_nonnegativity():
@@ -74,15 +74,14 @@ def test_pandas_conservation_and_nonnegativity():
         s, compl = step(s, jax.random.fold_in(key, 2), types, active)
         arrived += int(jnp.sum(active))
         completed += int(compl)
-        for q in (s.q_local, s.q_rack, s.q_remote):
-            assert (np.asarray(q) >= 0).all()
+        assert (np.asarray(s.q) >= 0).all()
     assert int(bp.num_in_system(s)) == arrived - completed
 
 
 def test_pandas_workload_includes_in_service_residual():
     s = bp.init_state(TOPO)
     s = s._replace(serving=s.serving.at[0].set(loc.LOCAL),
-                   q_local=s.q_local.at[0].set(2))
+                   q=s.q.at[0, 0].set(2))
     w = bp.workload(s, EST)
     assert float(w[0]) == pytest.approx(3 / 0.5)  # (2 queued + 1 serving)/alpha
     assert float(w[1]) == 0.0

@@ -1,0 +1,112 @@
+"""Google cluster-usage v2 ingest adapter: column mapping, binning,
+rack-weight derivation, and the export -> ingest round-trip."""
+
+import csv
+
+import numpy as np
+import pytest
+
+from repro import workloads as wl
+from repro.workloads.ingest import (GOOGLE_V2_SUBMIT,
+                                    GOOGLE_V2_TASK_EVENT_COLUMNS,
+                                    load_google_cluster_csv,
+                                    save_google_cluster_csv)
+
+
+def _write_events(path, rows):
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        for r in rows:
+            w.writerow(r)
+
+
+def _event(t_us, event_type=GOOGLE_V2_SUBMIT, machine=""):
+    row = [t_us, 0, 1, 0, machine, event_type, "u", 0, 0, "", "", "", ""]
+    assert len(row) == len(GOOGLE_V2_TASK_EVENT_COLUMNS)
+    return row
+
+
+def test_ingest_bins_submit_events(tmp_path):
+    p = tmp_path / "task_events.csv"
+    s = 1_000_000  # one second in microseconds
+    _write_events(p, [
+        _event(0), _event(10 * s), _event(59 * s),        # interval 0
+        _event(60 * s), _event(61 * s),                   # interval 1
+        _event(130 * s),                                  # interval 2
+        _event(65 * s, event_type=1),                     # SCHEDULE: ignored
+    ])
+    tr = load_google_cluster_csv(p, interval=60.0)
+    assert tr.interval == 60.0
+    np.testing.assert_array_equal(tr.arrivals, [3, 2, 1])
+    assert tr.rack_weights is None
+    # the result is an ordinary Trace: it compiles and replays
+    scn = wl.trace_to_scenario(tr, max_segments=8)
+    assert abs(scn.mean_lam_mult - 1.0) < 1e-9
+
+
+def test_ingest_rejects_malformed_rows(tmp_path):
+    p = tmp_path / "bad.csv"
+    _write_events(p, [[123, 0, 1]])  # too few columns
+    with pytest.raises(ValueError, match="columns"):
+        load_google_cluster_csv(p)
+    # a non-numeric first row is tolerated as a header, so the malformed
+    # timestamp must sit past line 1 to be a hard error
+    _write_events(p, [_event(0), _event("not-a-time")])
+    with pytest.raises(ValueError, match="unparseable"):
+        load_google_cluster_csv(p)
+    _write_events(p, [_event(0, event_type=5)])
+    with pytest.raises(ValueError, match="no events"):
+        load_google_cluster_csv(p)  # nothing submits
+    with pytest.raises(FileNotFoundError):
+        load_google_cluster_csv(tmp_path / "missing.csv")
+
+
+def test_ingest_derives_rack_weights_from_machines(tmp_path):
+    p = tmp_path / "placed.csv"
+    s = 1_000_000
+    # all interval-0 events on one machine; interval 1 has no machine ids
+    _write_events(p, [
+        _event(0, machine="m-a"), _event(1 * s, machine="m-a"),
+        _event(70 * s), _event(71 * s),
+    ])
+    tr = load_google_cluster_csv(p, interval=60.0, num_racks=4)
+    assert tr.rack_weights.shape == (2, 4)
+    # interval 0: all mass on m-a's rack; interval 1: uniform fallback
+    assert sorted(tr.rack_weights[0].tolist(), reverse=True)[0] == 1.0
+    np.testing.assert_allclose(tr.rack_weights[1], 0.25)
+
+
+def test_google_csv_roundtrip(tmp_path):
+    """Export -> ingest reproduces arrivals exactly, and rack weights
+    whenever the weights are empirical frequencies of the counts."""
+    arr = np.array([4.0, 0.0, 8.0, 2.0])
+    rw = np.array([[0.25, 0.75], [0.5, 0.5], [0.5, 0.5], [1.0, 0.0]])
+    tr = wl.Trace("g", interval=300.0, arrivals=arr, rack_weights=rw)
+    p = tmp_path / "export.csv"
+    save_google_cluster_csv(tr, p)
+    back = load_google_cluster_csv(p, interval=300.0, num_racks=2,
+                                   num_intervals=4)
+    np.testing.assert_array_equal(back.arrivals, arr)
+    # interval 1 had no events -> uniform fallback; others exact
+    np.testing.assert_allclose(back.rack_weights[0], rw[0])
+    np.testing.assert_allclose(back.rack_weights[2], rw[2])
+    np.testing.assert_allclose(back.rack_weights[3], rw[3])
+    np.testing.assert_allclose(back.rack_weights[1], 0.5)
+
+
+def test_google_roundtrip_without_weights(tmp_path):
+    rng = np.random.default_rng(0)
+    tr = wl.Trace("plain", interval=60.0,
+                  arrivals=rng.poisson(20.0, 16).astype(np.float64))
+    p = tmp_path / "plain.csv"
+    save_google_cluster_csv(tr, p)
+    back = load_google_cluster_csv(p, interval=60.0, num_intervals=16)
+    np.testing.assert_array_equal(back.arrivals, tr.arrivals)
+    # and the full loop closes: ingest -> compile -> simulate
+    from repro.core import locality as loc, simulator as sim
+    cfg = sim.SimConfig(topo=loc.Topology(12, 4), true_rates=loc.Rates(),
+                        max_arrivals=16, horizon=400, warmup=100)
+    est = sim.make_estimates(cfg, "network", 0.0, -1)
+    out = sim.simulate("balanced_pandas", cfg, 2.0, est, seed=0,
+                       scenario=wl.trace_to_scenario(back))
+    assert np.isfinite(out["mean_delay"])

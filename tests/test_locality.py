@@ -155,5 +155,10 @@ def test_random_argmin_breaks_ties_uniformly():
 def test_topology_validation():
     with pytest.raises(ValueError):
         loc.Topology(25, 6)
+    # racks smaller than the replication factor are fine as a host fleet
+    # (the serving engine runs pods of 2); the hot-rack *sampler* is what
+    # needs 3 servers per rack, so SimConfig enforces it instead
+    from repro.core import simulator as sim
+    loc.Topology(4, 2)
     with pytest.raises(ValueError):
-        loc.Topology(4, 2)  # rack smaller than replication factor
+        sim.SimConfig(topo=loc.Topology(4, 2), true_rates=loc.Rates())

@@ -113,7 +113,7 @@ def test_extra_metrics_flow_through_simulator():
 # -------------------------------------------- decision cross-checks (trace) -
 
 def _occupancy(s: bp.PandasState) -> np.ndarray:
-    return np.asarray(s.q_local + s.q_rack + s.q_remote)
+    return np.asarray(s.q.sum(axis=1))
 
 
 @pytest.mark.parametrize("name", ["balanced_pandas", "pandas_po2"])
@@ -235,7 +235,7 @@ def test_pandas_po_d_routes_within_candidates_and_conserves():
     state = pandas_po2.route_one_po_d(state, jax.random.PRNGKey(0),
                                       jnp.asarray(locs, jnp.int32),
                                       jnp.bool_(True), EST, RACK_OF, d=2)
-    assert int(state.q_local.sum()) == 1 and int(state.q_remote.sum()) == 0
+    assert int(state.q[:, 0].sum()) == 1 and int(state.q[:, 2].sum()) == 0
 
 
 def test_pandas_po_d_large_d_matches_full_pandas_statistically():
