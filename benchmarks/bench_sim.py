@@ -59,3 +59,43 @@ def bench(fast: bool = True):
                          f"policy={name},topology={label},K={topo.num_tiers},"
                          f"M={topo.num_servers},horizon={horizon}"))
     return rows
+
+
+def bench_placement(fast: bool = True):
+    """Placement-sampler throughput: simulator slots/sec of the default
+    policy under every registered replica placement, 3-tier and 4-tier.
+
+    The placement seam swaps the arrival-type sampler inside the
+    `lax.scan`; this bench tracks what each compiled sampler costs
+    relative to the bitwise-pinned uniform draw (the §Placement
+    throughput record of the CI bench artifact).
+    """
+    import jax
+    from repro.core import locality as loc, simulator as sim
+    from repro.placement import available_placements
+
+    horizon = 2_000 if fast else 20_000
+    grids = (
+        ("3tier", loc.Topology(24, 6), loc.Rates()),
+        ("4tier", loc.Topology(24, (6, 12)), loc.Rates((0.5, 0.45, 0.35,
+                                                        0.25))),
+    )
+    rows = []
+    for label, topo, rates in grids:
+        cfg = sim.SimConfig(topo=topo, true_rates=rates, p_hot=0.5,
+                            max_arrivals=24, horizon=horizon,
+                            warmup=horizon // 4)
+        cap = loc.capacity_hot_rack(topo, rates, cfg.p_hot)
+        est = sim.make_estimates(cfg, "network", 0.0, -1)
+        args = (np.float32(0.7 * cap), est.astype(np.float32), np.uint32(0))
+        for plc in available_placements():
+            run = jax.jit(sim._build_run("balanced_pandas", cfg,
+                                         placement=plc))
+            jax.block_until_ready(run(*args))  # compile
+            dt = min(_timed(run, args) for _ in range(3))
+            rows.append((f"sim_slots_per_sec_placement_{plc}_{label}",
+                         horizon / dt,
+                         f"placement={plc},policy=balanced_pandas,"
+                         f"topology={label},K={topo.num_tiers},"
+                         f"M={topo.num_servers},horizon={horizon}"))
+    return rows

@@ -19,8 +19,8 @@ from pathlib import Path
 
 
 def _registry_epilog() -> str:
-    """Render the scenario/policy registries for --help."""
-    from repro import workloads as wl
+    """Render the scenario/policy/placement registries for --help."""
+    from repro import placement as plc, workloads as wl
     from repro.core import policy as pol
 
     def block(title, entries):
@@ -34,6 +34,8 @@ def _registry_epilog() -> str:
                    pol.policy_descriptions())
     lines += block("registered routers (serving engine / data pipeline)",
                    pol.router_descriptions())
+    lines += block("registered replica placements (simulator / engine / "
+                   "pipeline)", plc.placement_descriptions())
     return "\n".join(lines)
 
 
@@ -48,8 +50,8 @@ def main() -> None:
                     help="paper-scale horizons (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig34,fig56,drift,kernels,"
-                         "sim_throughput,serving,serving_scenarios,"
-                         "trace_replay,roofline")
+                         "sim_throughput,placement,serving,"
+                         "serving_scenarios,trace_replay,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="additionally write every bench row as a "
                          "machine-readable JSON perf record (the artifact "
@@ -94,6 +96,7 @@ def main() -> None:
     section("drift", lambda: figures.fig_drift(fast))
     section("kernels", lambda: bench_kernels.bench(fast))
     section("sim_throughput", lambda: bench_sim.bench(fast))
+    section("placement", lambda: bench_sim.bench_placement(fast))
     section("serving", lambda: bench_serving.bench(fast))
     section("serving_scenarios", lambda: bench_serving.bench_scenarios(fast))
     section("trace_replay", lambda: bench_serving.replay_trace(

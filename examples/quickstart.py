@@ -4,18 +4,33 @@
    mis-estimation (the paper's core experiment, reduced horizon).
 2. Kernel layer — the batched routing kernel vs its oracle.
 3. Framework layer — 20 training steps of a small LM fed by the
-   locality-aware data pipeline.
+   locality-aware data pipeline.  The pipeline synthesizes Zipf-skewed
+   tokens (`token_skew`) and the optimizer warms up within the run, so
+   the loss drop is a real signal, not noise: uniform tokens have no
+   learnable statistics (cross-entropy is already at ln(V)), which is
+   why the original uniform-token assertion flaked.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--fast]
+
+``--fast`` is the CI examples-smoke setting: reduced horizons, 12
+training steps, same assertions.
 """
+
+import argparse
 
 import numpy as np
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: reduced horizons, same assertions")
+    args = ap.parse_args()
+
     # --- 1. the paper's robustness experiment (reduced) --------------------
     from repro.core import locality as loc, simulator as sim
-    cfg = sim.default_config(horizon=8000, warmup=2000)
+    horizon, warmup = (2500, 600) if args.fast else (8000, 2000)
+    cfg = sim.default_config(horizon=horizon, warmup=warmup)
     cap = loc.capacity_hot_rack(cfg.topo, cfg.true_rates, cfg.p_hot)
     lam = 0.95 * cap
     print(f"== queueing: M={cfg.topo.num_servers}, capacity={cap:.1f} "
@@ -48,20 +63,32 @@ def main() -> None:
           f"locality mix {np.bincount(np.asarray(t_k), minlength=3)} ==")
 
     # --- 3. training through the locality-aware pipeline --------------------
+    import dataclasses
     from repro.configs import registry, runtime
+    from repro.data.pipeline import DataPipeline, PipelineConfig
     from repro.launch import mesh as mesh_lib
     from repro.train.trainer import Trainer, TrainerConfig
     cfg_m = registry.get_smoke_config("granite_moe_1b")
     mesh = mesh_lib.make_test_mesh((1, 1), ("data", "model"))
     plan = runtime.plan_for(cfg_m, "train_4k", "train", dp_axes=("data",))
-    tr = Trainer(cfg_m, TrainerConfig(seq_len=64, global_batch=4, steps=20,
-                                      log_every=5), mesh, plan)
+    # quickstart-sized optimizer: the production plan warms up over 100
+    # steps, which would leave the LR (and the loss) flat for this run
+    plan = dataclasses.replace(plan, opt=dataclasses.replace(
+        plan.opt, warmup_steps=5, decay_steps=200))
+    steps = 12 if args.fast else 20
+    pipe = DataPipeline(PipelineConfig(vocab_size=cfg_m.vocab_size,
+                                       seq_len=64, global_batch=4, seed=0,
+                                       token_skew=1.2))
+    tr = Trainer(cfg_m, TrainerConfig(seq_len=64, global_batch=4,
+                                      steps=steps, log_every=5), mesh, plan,
+                 pipeline=pipe)
     hist = tr.run()
     print("== training (granite-moe smoke config, locality-aware pipeline) ==")
     for h in hist:
         print(f"  step {h['step']:3d} loss {h['loss']:.3f} "
               f"locality(l/r/rem)={tuple(round(x, 2) for x in h['data_locality'])}")
-    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.2, \
+        (hist[0]["loss"], hist[-1]["loss"])
     print("done.")
 
 

@@ -474,14 +474,24 @@ def sample_task_types(key: jax.Array, topo: Topology, traffic: Traffic,
 
 def sample_arrivals_at(key: jax.Array, rack_of: jnp.ndarray, lam, p_hot,
                        hot_rack, max_arrivals: int,
-                       rack_weights: Optional[jnp.ndarray] = None):
+                       rack_weights: Optional[jnp.ndarray] = None,
+                       type_sampler=None):
     """One slot of arrivals under (possibly traced) per-slot scenario knobs:
-    returns (types (C_A,3) int32, active (C_A,) bool)."""
+    returns (types (C_A,3) int32, active (C_A,) bool).
+
+    `type_sampler` is the replica-placement seam (`repro.placement`): a
+    compiled ``sample(key, p_hot, hot_rack, batch, rack_weights)`` that
+    replaces the default i.i.d.-uniform draw.  The arrival *count* stream
+    (k_n) is split off first either way, so every placement sees the same
+    offered traffic (common random numbers across placements)."""
     k_n, k_t = jax.random.split(key)
     n = jnp.minimum(jax.random.poisson(k_n, lam), max_arrivals)
     active = jnp.arange(max_arrivals) < n
-    types = sample_task_types_at(k_t, rack_of, p_hot, hot_rack, max_arrivals,
-                                 rack_weights)
+    if type_sampler is None:
+        types = sample_task_types_at(k_t, rack_of, p_hot, hot_rack,
+                                     max_arrivals, rack_weights)
+    else:
+        types = type_sampler(k_t, p_hot, hot_rack, max_arrivals, rack_weights)
     return types, active
 
 

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import locality as loc, simulator as sim
 from repro.core.policy import PolicyConfig, PolicyLike
+from repro.placement import PlacementLike, placement_capacity
 from repro.workloads import Scenario, ScenarioConfig, ScenarioLike
 
 EPS_GRID = (0.05, 0.10, 0.15, 0.20, 0.25, 0.30)
@@ -41,6 +42,12 @@ RATE_OBLIVIOUS = ("priority", "fifo")
 # fixed prior is unbeatable (it is exact and never goes stale).
 DRIFT_SCENARIOS = ("static", "diurnal", "flash_crowd", "mmpp", "hot_shift",
                    "stragglers", "rack_congestion")
+# Placement-study grid: every registered placement x one representative
+# policy per family (full-scan PANDAS, blind EWMA PANDAS, MaxWeight)
+# under the two scenarios that move locality/network structure.
+PLACEMENTS = ("uniform", "hdfs", "spread", "hot_aware")
+PLACEMENT_POLICIES = ("balanced_pandas", "blind_pandas", "jsq_maxweight")
+PLACEMENT_SCENARIOS = ("static", "hot_shift", "rack_congestion")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,13 +72,15 @@ def default_study(fast: bool = False) -> StudyConfig:
 
 def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
               signs: Sequence[int] = (-1, 1),
-              scenario: ScenarioLike = None) -> Dict:
+              scenario: ScenarioLike = None,
+              placement: PlacementLike = None) -> Dict:
     """Returns nested results:
     delay[algo]: (L, E, S) with E = 1 (exact) + len(eps_grid)*len(signs)
     plus the grids needed to plot.  Error settings only materialize for
     rate-aware algorithms; oblivious ones get the exact column only.
     `scenario` (name / Scenario; None -> static) applies to every arm — the
-    loads stay expressed as fractions of the STATIC fluid capacity.
+    loads stay expressed as fractions of the STATIC fluid capacity (under
+    the uniform placement, whatever `placement` the arms actually run).
     """
     algos = list(algos or (RATE_AWARE + RATE_OBLIVIOUS))
     cap = loc.capacity_hot_rack(cfg.sim.topo, cfg.sim.true_rates, cfg.sim.p_hot)
@@ -92,7 +101,8 @@ def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
                  "delay": {}, "throughput": {}, "final_n": {}}
     for algo in algos:
         stack = est_stack if algo in RATE_AWARE else est_stack[:1]
-        res = sim.sweep(algo, cfg.sim, lam, stack, seeds, scenario=scenario)
+        res = sim.sweep(algo, cfg.sim, lam, stack, seeds, scenario=scenario,
+                        placement=placement)
         out["delay"][algo] = res["mean_delay"]
         out["throughput"][algo] = res["throughput"]
         out["final_n"][algo] = res["final_n"]
@@ -160,6 +170,83 @@ def summarize_drift(study: Dict) -> str:
         d_bl = float(study["delay"][scen]["blind_ewma"].mean())
         win = "blind" if study["blind_wins"][scen] else "fixed"
         lines.append(f"{scen:{width}s} {d_fix:12.2f} {d_bl:12.2f}  {win}")
+    return "\n".join(lines)
+
+
+def placement_study(cfg: StudyConfig,
+                    placements: Sequence[str] = PLACEMENTS,
+                    policies: Sequence[str] = PLACEMENT_POLICIES,
+                    scenarios: Union[Sequence[str],
+                                     Mapping[str, ScenarioLike]]
+                    = PLACEMENT_SCENARIOS,
+                    load: float = 0.7,
+                    capacity_samples: int = 2000) -> Dict:
+    """Placement x policy x scenario sweep: what hierarchy-aware replica
+    placement buys each scheduler (the knob the uniform model hard-coded).
+
+    Every arm runs at the same offered load — `load` x the *uniform*
+    static fluid capacity — so delay deltas across placements are
+    placement effects, not load normalization artifacts.  Per placement
+    the study also records the fluid capacity its replica distribution
+    induces (`repro.placement.placement_capacity`; None without scipy).
+    Returns delay/throughput/final_n[placement][scenario][policy] arrays
+    of shape (S_seeds,).
+    """
+    if isinstance(scenarios, Mapping):
+        scen_map: Dict[str, ScenarioLike] = dict(scenarios)
+    else:
+        scen_map = {s.name if isinstance(s, (Scenario, ScenarioConfig))
+                    else str(s): s for s in scenarios}
+    r = cfg.sim.true_rates
+    arms: Dict[str, PolicyLike] = {
+        str(p): (PolicyConfig("blind_pandas", {"prior": r.values})
+                 if p == "blind_pandas" else p)
+        for p in policies}
+    cap = loc.capacity_hot_rack(cfg.sim.topo, r, cfg.sim.p_hot)
+    lam = np.asarray([load], np.float32) * cap
+    seeds = np.asarray(cfg.seeds)
+    est_exact = sim.make_estimates(cfg.sim, "network", 0.0, -1)[None]
+
+    out: Dict = {"capacity_uniform": cap, "load": load,
+                 "placements": tuple(placements), "policies": tuple(arms),
+                 "scenarios": tuple(scen_map),
+                 "capacity": {}, "delay": {}, "throughput": {}, "final_n": {}}
+    for plc in placements:
+        out["capacity"][plc] = placement_capacity(
+            cfg.sim.topo, r, cfg.sim.p_hot, plc,
+            n_samples=capacity_samples, strict=False)
+        for name in ("delay", "throughput", "final_n"):
+            out[name][plc] = {scen: {} for scen in scen_map}
+        for scen, spec in scen_map.items():
+            for pol, policy in arms.items():
+                res = sim.sweep(policy, cfg.sim, lam, est_exact, seeds,
+                                scenario=spec, placement=plc)
+                out["delay"][plc][scen][pol] = res["mean_delay"][0, 0]
+                out["throughput"][plc][scen][pol] = res["throughput"][0, 0]
+                out["final_n"][plc][scen][pol] = res["final_n"][0, 0]
+    return out
+
+
+def summarize_placement(study: Dict) -> str:
+    """Human-readable placement-study table (scenario-major, one row per
+    placement; columns are policies)."""
+    pols = list(study["policies"])
+    width = max([10] + [len(p) for p in study["placements"]])
+    lines = [f"load {study['load']:.2f} x uniform static capacity "
+             f"({study['capacity_uniform']:.2f} tasks/slot); "
+             f"cells: mean delay (slots) over seeds"]
+    header = f"{'placement':{width}s} {'fluid_cap':>9s}  " + \
+        "  ".join(f"{p:>15s}" for p in pols)
+    for scen in study["scenarios"]:
+        lines.append(f"-- scenario: {scen}")
+        lines.append(header)
+        for plc in study["placements"]:
+            cap = study["capacity"][plc]
+            cap_s = f"{cap:9.2f}" if cap is not None else f"{'n/a':>9s}"
+            cells = "  ".join(
+                f"{float(study['delay'][plc][scen][p].mean()):15.2f}"
+                for p in pols)
+            lines.append(f"{plc:{width}s} {cap_s}  {cells}")
     return "\n".join(lines)
 
 

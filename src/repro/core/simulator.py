@@ -50,6 +50,7 @@ import numpy as np
 from repro.core import locality as loc
 from repro.core.policy import PolicyLike, make_policy
 from repro import workloads as wl
+from repro.placement import PlacementLike, make_placement
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,18 +118,25 @@ def make_estimates(cfg: SimConfig, mode: str, eps: float, sign: int,
 
 
 def _build_run(policy_like: PolicyLike, cfg: SimConfig,
-               scenario: wl.ScenarioLike = None):
+               scenario: wl.ScenarioLike = None,
+               placement: PlacementLike = None):
     """Returns jit-able run(lam_total, est(M,3), seed) -> metrics dict.
 
     `scenario` (name / ScenarioConfig / Scenario; None -> "static") compiles
     to fixed-shape per-segment arrays gathered once per slot — the only
     scenario seam in the simulator, shared by every policy.
+
+    `placement` (name / PlacementConfig / PlacementPolicy; None ->
+    "uniform") compiles to the per-task replica sampling distribution
+    (`repro.placement`) the arrival stream draws task types from; the
+    default reproduces the classic i.i.d.-uniform draws bitwise.
     """
     policy = make_policy(policy_like)
     topo, true_rates = cfg.topo, cfg.true_rates
     rack_of = jnp.asarray(topo.rack_of, jnp.int32)
     ancestors = jnp.asarray(topo.ancestors, jnp.int32)  # (depth, M)
     true_k = true_rates.as_array()
+    sample_types = make_placement(placement).build_sampler(topo)
     sched = wl.compile_schedule(wl.make_scenario(scenario), topo,
                                 cfg.horizon, cfg.p_hot)
     # Little's-law denominator: the offered rate over the measurement
@@ -150,7 +158,8 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             # random numbers).
             types, active = loc.sample_arrivals_at(
                 k_arr, rack_of, lam_total * knobs.lam_mult, knobs.p_hot,
-                knobs.hot_rack, cfg.max_arrivals, knobs.rack_weights)
+                knobs.hot_rack, cfg.max_arrivals, knobs.rack_weights,
+                type_sampler=sample_types)
             true_mk = true_k[None, :] * knobs.rate_mult
             state, compl = policy.slot_step(state, k_algo, types, active,
                                             est, true_mk, ancestors)
@@ -182,13 +191,14 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
 
 def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
              est: np.ndarray, seed: int = 0,
-             scenario: wl.ScenarioLike = None) -> Dict[str, Any]:
+             scenario: wl.ScenarioLike = None,
+             placement: PlacementLike = None) -> Dict[str, Any]:
     """Single-configuration run (jit-compiled).  ``lam_total == 0`` yields
     ``mean_delay = NaN`` (Little's law is undefined); negative loads are
     rejected here."""
     if lam_total < 0:
         raise ValueError(f"lam_total must be >= 0, got {lam_total}")
-    run = jax.jit(_build_run(policy, cfg, scenario))
+    run = jax.jit(_build_run(policy, cfg, scenario, placement))
     out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
               jnp.asarray(seed, jnp.uint32))
     return {k: float(v) for k, v in out.items()}
@@ -196,16 +206,18 @@ def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
 
 def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
           est_stack: np.ndarray, seeds: np.ndarray,
-          scenario: wl.ScenarioLike = None) -> Dict[str, np.ndarray]:
+          scenario: wl.ScenarioLike = None,
+          placement: PlacementLike = None) -> Dict[str, np.ndarray]:
     """Full cartesian sweep, vmapped: results have shape (L, E, S).
 
     lam_grid: (L,) loads; est_stack: (E, M, K); seeds: (S,).  The scenario
-    schedule is a closure constant — its shapes carry no batch dimension,
-    so the whole grid still compiles to one vmapped XLA program.
+    schedule and the compiled placement sampler are closure constants —
+    their shapes carry no batch dimension, so the whole grid still
+    compiles to one vmapped XLA program.
     """
     if np.any(np.asarray(lam_grid) < 0):
         raise ValueError(f"lam_grid must be >= 0, got {lam_grid}")
-    run = _build_run(policy, cfg, scenario)
+    run = _build_run(policy, cfg, scenario, placement)
     f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),
                  (0, None, None))
     f = jax.jit(f)

@@ -2,10 +2,12 @@
 
 The MapReduce structure of the paper maps directly onto the input pipeline of
 distributed training: the corpus is split into chunks, every chunk is
-replicated on 3 data hosts (rendezvous hashing), and each read is a "map
-task" whose service rate depends on where it runs — on a replica host
-(local), on a host in the same pod (rack-local: ICI/within-cell network), or
-across pods (remote: DCN).  The chunk->host assignment runs any router
+replicated on 3 data hosts — *which* hosts is the configured
+`PlacementPolicy` (`repro.placement`, ``PipelineConfig.placement``;
+the default "uniform" is the classic rendezvous hashing, bitwise) — and
+each read is a "map task" whose service rate depends on where it runs —
+on a replica host (local), on a host in the same pod (rack-local:
+ICI/within-cell network), or across pods (remote: DCN).  The chunk->host assignment runs any router
 registered in `core/policy.py` (Balanced-PANDAS default; JSQ-MW, FIFO,
 power-of-d PANDAS selectable by name), all driven through the uniform
 `route -> Decision` / `claim -> Claim` surface, with host read rates
@@ -26,9 +28,7 @@ restarts).
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-import heapq
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -36,6 +36,9 @@ from repro.core.cluster import tier_of
 from repro.core.estimator import EwmaRateEstimator
 from repro.core.locality import Topology
 from repro.core.policy import make_router
+from repro.placement import PlacementLike, make_placement
+from repro.placement.policies import chunk_replicas  # noqa: F401  (canonical
+# home is the placement subsystem; re-exported for the long-standing name)
 from repro.workloads import ScenarioLike, host_playback, make_scenario
 
 
@@ -51,6 +54,17 @@ class PipelineConfig:
     seed: int = 0
     replication: int = 3
     scheduler: str = "balanced_pandas"
+    # replica placement (repro.placement): which hosts hold each chunk.
+    # None -> "uniform" (the classic rendezvous placement, bitwise).
+    placement: PlacementLike = None
+    # deterministic placement rebalance cadence (reads between
+    # `PlacementPolicy.rebalance()` calls; 0 disables) — only meaningful
+    # for popularity-driven placements (hot_aware)
+    rebalance_every: int = 0
+    # token unigram skew: 0.0 keeps the classic uniform synthetic tokens
+    # (bitwise); > 0 draws Zipf(s)-distributed tokens so a language model
+    # trained on the pipeline has learnable statistics (quickstart)
+    token_skew: float = 0.0
     # mean simulated read service rates (reads per virtual-clock unit)
     rate_local: float = 1.0
     rate_rack: float = 0.8
@@ -66,24 +80,20 @@ class PipelineConfig:
     scenario_horizon: float = 256.0  # virtual-time units per playback cycle
 
 
-def chunk_replicas(chunk_id: int, num_hosts: int, replication: int,
-                   seed: int) -> List[int]:
-    """Rendezvous (HRW) hashing: stable 3-replica placement per chunk."""
-    scores = []
-    for h in range(num_hosts):
-        digest = hashlib.blake2s(
-            f"{seed}:{chunk_id}:{h}".encode(), digest_size=8).digest()
-        scores.append((int.from_bytes(digest, "big"), h))
-    scores.sort(reverse=True)
-    return sorted(h for _, h in scores[:replication])
-
-
 def chunk_tokens(cfg: PipelineConfig, chunk_id: int) -> np.ndarray:
-    """Deterministic synthetic tokens for one chunk."""
+    """Deterministic synthetic tokens for one chunk: uniform by default
+    (bitwise-stable across PRs), Zipf-skewed when ``cfg.token_skew > 0``
+    (rank r gets mass ~ r^-skew — learnable unigram statistics)."""
     rng = np.random.default_rng(
         np.random.SeedSequence([cfg.seed, chunk_id]))
-    return rng.integers(0, cfg.vocab_size, cfg.tokens_per_chunk,
-                        dtype=np.int32)
+    if cfg.token_skew <= 0.0:
+        return rng.integers(0, cfg.vocab_size, cfg.tokens_per_chunk,
+                            dtype=np.int32)
+    p = np.arange(1, cfg.vocab_size + 1, dtype=np.float64) ** -cfg.token_skew
+    cdf = np.cumsum(p / p.sum())
+    u = rng.random(cfg.tokens_per_chunk)
+    return np.minimum(np.searchsorted(cdf, u),
+                      cfg.vocab_size - 1).astype(np.int32)
 
 
 class DataPipeline:
@@ -114,6 +124,12 @@ class DataPipeline:
         self.estimator = EwmaRateEstimator(n_hosts, self.prior)
         self.router = make_router(cfg.scheduler, self.spec, self.prior,
                                   estimator=self.estimator, seed=cfg.seed)
+        # Replica placement: every chunk -> host assignment flows through
+        # one PlacementPolicy (uniform == the classic `chunk_replicas`).
+        self.placement = make_placement(cfg.placement)
+        if cfg.rebalance_every < 0:
+            raise ValueError(f"rebalance_every must be >= 0, got "
+                             f"{cfg.rebalance_every}")
         self.slow = slow_hosts or {}
         # Scenario playback over the virtual clock: the same declarative
         # scenarios the simulator and serving engine run, here modelling
@@ -134,8 +150,8 @@ class DataPipeline:
 
     # -- scheduling ---------------------------------------------------------
     def _read_chunk(self, chunk_id: int) -> np.ndarray:
-        locs = chunk_replicas(chunk_id, self.spec.num_servers,
-                              self.cfg.replication, self.cfg.seed)
+        locs = self.placement.replicas(self.spec, chunk_id,
+                                       self.cfg.replication, self.cfg.seed)
         decision = self.router.route(locs)
         # Deferred-assignment routers (global queue) pick the host only at
         # claim time; the synchronous pipeline stands in for "whichever host
@@ -160,6 +176,12 @@ class DataPipeline:
         self.metrics["reads"] += 1
         self.metrics["virtual_time"] = self._clock
         self.metrics["host_reads"][host] += 1
+        # popularity feedback -> deterministic rebalance on a fixed cadence
+        self.placement.note_read(chunk_id)
+        if self.cfg.rebalance_every and \
+                self.metrics["reads"] % self.cfg.rebalance_every == 0:
+            self.metrics["rebalanced"] = self.metrics.get("rebalanced", 0) \
+                + self.placement.rebalance()
         return chunk_tokens(self.cfg, chunk_id)
 
     # -- iteration ----------------------------------------------------------
@@ -181,13 +203,21 @@ class DataPipeline:
 
     # -- checkpointable state ------------------------------------------------
     def state_dict(self) -> Dict:
+        # `reads` drives the rebalance cadence and `placement` carries the
+        # popularity state (hot_aware), so a restored pipeline places and
+        # rebalances exactly like the uninterrupted run would have.
         return {"cursor": self._cursor, "buffer": self._buffer.copy(),
-                "clock": self._clock}
+                "clock": self._clock, "reads": int(self.metrics["reads"]),
+                "placement": self.placement.state_dict()}
 
     def load_state_dict(self, s: Dict) -> None:
         self._cursor = int(s["cursor"])
         self._buffer = np.asarray(s["buffer"], np.int32)
         self._clock = float(s["clock"])
+        # pre-placement checkpoints (no keys) restore as before
+        self.metrics["reads"] = int(s.get("reads", self.metrics["reads"]))
+        if s.get("placement"):
+            self.placement.load_state_dict(s["placement"])
 
     @property
     def locality_fractions(self) -> Tuple[float, float, float]:

@@ -1,0 +1,29 @@
+"""Replica-placement subsystem: hierarchy-aware chunk placement driving
+locality on every layer.
+
+`PlacementPolicy` (see `repro.placement.policy`) projects one placement
+rule onto both substrates — a fixed-shape per-task replica sampling
+distribution for the JAX simulator, and a deterministic host-side
+placement map for the serving engine and data pipeline.  Built-ins
+(`repro.placement.policies`): ``uniform`` (the pre-placement behavior,
+bitwise-pinned), ``hdfs`` (rack-aware primary/same-rack/off-rack),
+``spread`` (greedy max-distance anti-affinity), ``hot_aware``
+(popularity-skewed replication factor with deterministic rebalance).
+`placement_capacity` (`repro.placement.capacity`) computes the fluid
+capacity a placement induces via a sampled-type LP.
+"""
+
+from repro.placement.policy import (  # noqa: F401
+    PlacementConfig,
+    PlacementLike,
+    PlacementPolicy,
+    available_placements,
+    get_placement_cls,
+    make_placement,
+    placement_descriptions,
+    register_placement,
+)
+from repro.placement.capacity import (  # noqa: F401
+    placement_capacity,
+    sample_placement_types,
+)

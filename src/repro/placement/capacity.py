@@ -1,0 +1,103 @@
+"""Fluid capacity under an arbitrary replica placement.
+
+`locality.capacity_hot_rack` has a water-filling closed form because the
+uniform placement confines every hot task's replicas to one rack.  A
+placement policy breaks that structure (an `hdfs` hot chunk keeps one
+replica off-rack; `spread` scatters all three), so the capacity region
+must be computed from the *distribution of replica sets* the placement
+induces: sample task types from the compiled placement sampler, collapse
+them into type classes, and solve the fluid LP
+
+    max Λ  s.t.  Σ_m x[t, m] = freq_t · Λ          (demand split)
+                 Σ_t x[t, m] / r[t, m] ≤ 1          (server utilisation)
+
+where ``r[t, m] = rates[tier of m w.r.t. type t]``.  The uniform
+placement recovers `capacity_hot_rack` up to Monte-Carlo error on the
+type frequencies (checked in tests/test_placement.py); the deltas
+between placements are the §Placement capacity numbers in
+EXPERIMENTS.md.
+
+Needs scipy (the LP); callers that may run without it (CI smoke) should
+pass ``strict=False`` and handle the ``None``.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.placement.policy import PlacementLike, make_placement
+
+if TYPE_CHECKING:  # annotation-only: keeps this package import-light so
+    from repro.core.locality import Rates, Topology  # core can import it
+
+
+def sample_placement_types(topo: Topology, placement: PlacementLike,
+                           p_hot: float, n_samples: int = 2000,
+                           hot_rack: int = 0, seed: int = 0) -> np.ndarray:
+    """(n_samples, NUM_REPLICAS) replica sets drawn from the placement's
+    compiled simulator sampler under static knobs."""
+    import jax
+    import jax.numpy as jnp
+    sampler = make_placement(placement).build_sampler(topo)
+    types = sampler(jax.random.PRNGKey(seed), jnp.float32(p_hot),
+                    jnp.int32(hot_rack), int(n_samples))
+    return np.asarray(types)
+
+
+def placement_capacity(topo: Topology, rates: Union[Rates, Sequence[float]],
+                       p_hot: float, placement: PlacementLike,
+                       n_samples: int = 2000, hot_rack: int = 0,
+                       seed: int = 0, strict: bool = True
+                       ) -> Optional[float]:
+    """Monte-Carlo fluid capacity Λ* (tasks/slot) under `placement`.
+
+    Returns None (instead of raising) when scipy is unavailable and
+    ``strict=False`` — the CI smoke path.
+    """
+    try:
+        import scipy.optimize as sopt
+        import scipy.sparse as ssp
+    except ImportError:
+        if strict:
+            raise
+        return None
+    from repro.core.cluster import worker_tiers
+    from repro.core.locality import Rates
+
+    r = np.asarray(rates.values if isinstance(rates, Rates) else rates,
+                   np.float64)
+    if r.size != topo.num_tiers:
+        raise ValueError(f"rates have {r.size} tiers but topology has "
+                         f"{topo.num_tiers}")
+    types = sample_placement_types(topo, placement, p_hot, n_samples,
+                                   hot_rack, seed)
+    uniq, counts = np.unique(types, axis=0, return_counts=True)
+    freq = counts / counts.sum()
+    t_count, m = uniq.shape[0], topo.num_servers
+    # (T, M) service rate of each server for each type class
+    rate_tm = np.stack([r[worker_tiers(topo, row.tolist())] for row in uniq])
+
+    # variables: [Λ, x[0,0..M-1], x[1,:], ...] — maximize Λ
+    nvar = 1 + t_count * m
+    c = np.zeros(nvar)
+    c[0] = -1.0
+    # demand split: Σ_m x[t, m] - freq_t Λ = 0
+    rows = np.repeat(np.arange(t_count), m + 1)
+    cols = np.concatenate([np.concatenate(([0], 1 + t * m + np.arange(m)))
+                           for t in range(t_count)])
+    vals = np.concatenate([np.concatenate(([-freq[t]], np.ones(m)))
+                           for t in range(t_count)])
+    a_eq = ssp.csr_matrix((vals, (rows, cols)), shape=(t_count, nvar))
+    # utilisation: Σ_t x[t, m] / r[t, m] <= 1
+    rows = np.tile(np.arange(m), t_count)
+    cols = 1 + np.arange(t_count * m)
+    vals = (1.0 / rate_tm).ravel()
+    a_ub = ssp.csr_matrix((vals, (rows, cols)), shape=(m, nvar))
+    res = sopt.linprog(c, A_ub=a_ub, b_ub=np.ones(m), A_eq=a_eq,
+                       b_eq=np.zeros(t_count), bounds=(0, None),
+                       method="highs")
+    if not res.success:
+        raise RuntimeError(f"placement fluid LP failed: {res.message}")
+    return float(-res.fun)

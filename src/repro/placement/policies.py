@@ -1,0 +1,399 @@
+"""Built-in replica-placement policies: uniform (the pre-placement
+behavior, bitwise), HDFS-style rack-aware, max-distance spread, and
+popularity-aware variable replication.
+
+Each policy is one class with the two projections of
+`repro.placement.policy.PlacementPolicy`:
+
+  * the **simulator sampler** draws a task's replica set per arrival with
+    fixed shapes (Gumbel-argmax picks over masked logits, Gumbel-top-k for
+    without-replacement pools), consuming the traced per-slot scenario
+    knobs (``p_hot``, ``hot_rack``, ``rack_weights``) exactly like the
+    classic sampler — so hot-rack drift (`hot_shift`) moves the *placement*
+    too;
+  * the **host rule** derives a deterministic replica list per chunk from
+    the same rendezvous (HRW) ranking the pipeline always used — the
+    policies differ only in how they walk that ranking against the
+    `Topology` ancestor table, so any two hosts agree on every chunk's
+    placement without coordination.
+
+The hierarchy enters K-generically through `Topology.ancestors`: "rack"
+below means level-0 groups, and `spread` walks levels from the coarsest
+down, so the same four policies run unchanged on flat (K=2), rack (K=3)
+and pod (K=4+) topologies, heterogeneous group sizes included.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import locality as loc
+from repro.core.locality import NUM_REPLICAS, Topology
+from repro.placement.policy import PlacementPolicy, register_placement
+
+# ---------------------------------------------------------------------------
+# Shared primitives
+# ---------------------------------------------------------------------------
+
+
+def hrw_ranking(chunk_id: int, num_hosts: int, seed: int) -> List[int]:
+    """Rendezvous (HRW) ranking of all hosts for one chunk: every placement
+    policy walks this ranking, so placement stays stable under fleet
+    resizes (only chunks whose top ranks change move).  The first
+    `replication` entries, sorted, are exactly the classic
+    `chunk_replicas` assignment."""
+    scores = []
+    for h in range(num_hosts):
+        digest = hashlib.blake2s(
+            f"{seed}:{chunk_id}:{h}".encode(), digest_size=8).digest()
+        scores.append((int.from_bytes(digest, "big"), h))
+    scores.sort(reverse=True)
+    return [h for _, h in scores]
+
+
+def chunk_replicas(chunk_id: int, num_hosts: int, replication: int,
+                   seed: int) -> List[int]:
+    """Classic uniform rendezvous placement (the pre-placement behavior,
+    kept bitwise: `data.pipeline.chunk_replicas` re-exports this)."""
+    return sorted(hrw_ranking(chunk_id, num_hosts, seed)[:replication])
+
+
+def _hot_split(key: jax.Array, p_hot, hot_rack, batch: int,
+               rack_weights: Optional[jnp.ndarray]):
+    """Shared hot-task assignment: returns (hot (B,) bool, hot_racks (B,)
+    int32, key for the placement draws).  Mirrors the key discipline of
+    `locality.sample_task_types_at`: the weighted path splits differently
+    and only activates when a segment opts into rack weights."""
+    if rack_weights is None:
+        k_hot, k_rest = jax.random.split(key)
+        hot_racks = jnp.broadcast_to(jnp.asarray(hot_rack, jnp.int32),
+                                     (batch,))
+    else:
+        k_hot, k_rack, k_rest = jax.random.split(key, 3)
+        logw = jnp.log(jnp.asarray(rack_weights, jnp.float32))
+        hot_racks = jax.random.categorical(k_rack, logw, shape=(batch,)
+                                           ).astype(jnp.int32)
+    hot = jax.random.bernoulli(k_hot, p_hot, (batch,))
+    return hot, hot_racks, k_rest
+
+
+def _pick(key: jax.Array, logits: jnp.ndarray) -> jnp.ndarray:
+    """(B,) Gumbel-argmax draw per row of (B, M) logits (uniform over the
+    0-logit support when the support is masked with -inf)."""
+    g = jax.random.gumbel(key, logits.shape)
+    return jnp.argmax(logits + g, axis=1).astype(jnp.int32)
+
+
+def _pick_max(key: jax.Array, score: jnp.ndarray) -> jnp.ndarray:
+    """(B,) uniform draw among each row's exact maxima of (B, M) scores."""
+    is_max = score == jnp.max(score, axis=1, keepdims=True)
+    g = jax.random.gumbel(key, score.shape)
+    return jnp.argmax(jnp.where(is_max, g, -jnp.inf), axis=1).astype(jnp.int32)
+
+
+def _tiers_wrt(chosen: jnp.ndarray, anc: jnp.ndarray) -> jnp.ndarray:
+    """(B, M) tier of every server w.r.t. a *partial* replica set
+    ``chosen`` (B, i): 0 on chosen servers, else 1 + deepest level shared
+    with any of them, else K-1 — the batched generalization of
+    `locality.server_tiers` the greedy max-distance pick scores against."""
+    d, m = anc.shape
+    b = chosen.shape[0]
+    tier = jnp.full((b, m), d + 1, jnp.int32)
+    for lvl in range(d - 1, -1, -1):
+        row = anc[lvl]
+        share = jnp.any(row[None, :, None] == row[chosen][:, None, :], axis=-1)
+        tier = jnp.where(share, lvl + 1, tier)
+    sid = jnp.arange(m, dtype=chosen.dtype)
+    local = jnp.any(sid[None, :, None] == chosen[:, None, :], axis=-1)
+    return jnp.where(local, 0, tier)
+
+
+def _primary_logits(hot: jnp.ndarray, in_hot_rack: jnp.ndarray) -> jnp.ndarray:
+    """(B, M) logits of the primary replica: uniform over the hot rack for
+    hot tasks, uniform over the fleet otherwise (the same mixture the
+    classic sampler applies to all three replicas at once)."""
+    return jnp.where(hot[:, None],
+                     jnp.where(in_hot_rack, 0.0, -jnp.inf),
+                     jnp.zeros_like(in_hot_rack, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# uniform — the pre-placement behavior, bitwise
+# ---------------------------------------------------------------------------
+
+
+@register_placement
+class UniformPlacement(PlacementPolicy):
+    """I.i.d.-uniform replicas (the pre-placement default, bitwise-pinned):
+    the simulator draws all replicas from the hot-rack mixture at once and
+    the host side takes the top rendezvous ranks."""
+
+    name = "uniform"
+
+    def build_sampler(self, topo: Topology):
+        rack_of = jnp.asarray(topo.rack_of, jnp.int32)
+
+        def sample(key, p_hot, hot_rack, batch, rack_weights=None):
+            # Verbatim delegation: same ops, same key splits -> the draws
+            # are bitwise identical to the pre-placement sampler.
+            return loc.sample_task_types_at(key, rack_of, p_hot, hot_rack,
+                                            batch, rack_weights)
+        return sample
+
+    def replicas(self, spec: Topology, chunk_id: int, replication: int,
+                 seed: int) -> List[int]:
+        return chunk_replicas(chunk_id, spec.num_servers, replication, seed)
+
+
+# ---------------------------------------------------------------------------
+# hdfs — primary + same-rack second + off-rack third
+# ---------------------------------------------------------------------------
+
+
+@register_placement
+class HdfsPlacement(PlacementPolicy):
+    """HDFS-style rack-aware placement: primary, a second replica in the
+    primary's rack, and a third off-rack (fault-domain isolation), rack
+    meaning the level-0 group of the `Topology` ancestor table at any K.
+
+    A hot task's primary lands in the hot rack, so — unlike `uniform` —
+    one replica of every hot chunk escapes the hot rack: hot traffic is no
+    longer confined to one rack's servers, which trades peak locality for
+    capacity headroom under skew.  On a topology that cannot express the
+    rule (a single rack, or a rack of one server) the sampler degrades to
+    `uniform`.  Host side: the primary is the chunk's top rendezvous rank;
+    the second/third are the top ranks inside / outside its rack;
+    replication factors beyond 3 follow the remaining ranking.
+    """
+
+    name = "hdfs"
+
+    def build_sampler(self, topo: Topology):
+        if topo.num_racks < 2 or topo.min_rack_size < 2:
+            return UniformPlacement().build_sampler(topo)
+        rack_of = jnp.asarray(topo.rack_of, jnp.int32)
+        m = topo.num_servers
+
+        def sample(key, p_hot, hot_rack, batch, rack_weights=None):
+            hot, hot_racks, k = _hot_split(key, p_hot, hot_rack, batch,
+                                           rack_weights)
+            k1, k2, k3 = jax.random.split(k, 3)
+            in_hot_rack = rack_of[None, :] == hot_racks[:, None]
+            primary = _pick(k1, _primary_logits(hot, in_hot_rack))
+            same = rack_of[None, :] == rack_of[primary][:, None]
+            not_prim = jnp.arange(m)[None, :] != primary[:, None]
+            second = _pick(k2, jnp.where(same & not_prim, 0.0, -jnp.inf))
+            third = _pick(k3, jnp.where(~same, 0.0, -jnp.inf))
+            types = jnp.stack([primary, second, third], axis=1)
+            return jnp.sort(types, axis=1).astype(jnp.int32)
+        return sample
+
+    def replicas(self, spec: Topology, chunk_id: int, replication: int,
+                 seed: int) -> List[int]:
+        ranking = hrw_ranking(chunk_id, spec.num_servers, seed)
+        if spec.num_racks < 2 or spec.min_rack_size < 2:
+            return sorted(ranking[:replication])
+        rack = np.asarray(spec.rack_of)
+        primary = ranking[0]
+        chosen = [primary]
+        second = next((h for h in ranking[1:] if rack[h] == rack[primary]),
+                      None)
+        third = next((h for h in ranking[1:] if rack[h] != rack[primary]),
+                     None)
+        for h in (second, third):
+            if h is not None and len(chosen) < replication:
+                chosen.append(h)
+        for h in ranking[1:]:  # replication > 3 follows the ranking
+            if len(chosen) >= replication:
+                break
+            if h not in chosen:
+                chosen.append(h)
+        return sorted(chosen)
+
+
+# ---------------------------------------------------------------------------
+# spread — greedy max-distance anti-affinity
+# ---------------------------------------------------------------------------
+
+
+@register_placement
+class SpreadPlacement(PlacementPolicy):
+    """Max-distance anti-affinity: after the primary, each replica lands
+    uniformly among the servers *farthest* (highest locality tier w.r.t.
+    the partial replica set) from the replicas placed so far.
+
+    On the flat-rack topology the three replicas occupy three distinct
+    racks; on a pod topology the second crosses pods and the third takes
+    the deepest level that still has room (off-rack in the other pod when
+    only two pods exist) — the K-generic reading of "anti-affinity across
+    the deepest level", with no special-casing: at K=2 it reduces to
+    distinct uniform servers.  Host side: walk the chunk's rendezvous
+    ranking greedily, accepting each host iff it maximizes the tier
+    w.r.t. the hosts already chosen.
+    """
+
+    name = "spread"
+
+    def build_sampler(self, topo: Topology):
+        rack_of = jnp.asarray(topo.rack_of, jnp.int32)
+        anc = jnp.asarray(topo.ancestors, jnp.int32)
+
+        def sample(key, p_hot, hot_rack, batch, rack_weights=None):
+            hot, hot_racks, k = _hot_split(key, p_hot, hot_rack, batch,
+                                           rack_weights)
+            keys = jax.random.split(k, NUM_REPLICAS)
+            in_hot_rack = rack_of[None, :] == hot_racks[:, None]
+            chosen = _pick(keys[0], _primary_logits(hot, in_hot_rack))[:, None]
+            for i in range(1, NUM_REPLICAS):
+                tier = _tiers_wrt(chosen, anc)
+                nxt = _pick_max(keys[i], tier)
+                chosen = jnp.concatenate([chosen, nxt[:, None]], axis=1)
+            return jnp.sort(chosen, axis=1).astype(jnp.int32)
+        return sample
+
+    def replicas(self, spec: Topology, chunk_id: int, replication: int,
+                 seed: int) -> List[int]:
+        from repro.core.cluster import tier_of
+        ranking = hrw_ranking(chunk_id, spec.num_servers, seed)
+        chosen = [ranking[0]]
+        while len(chosen) < replication:
+            best = max(ranking, key=lambda h: (-1 if h in chosen
+                                               else tier_of(spec, chosen, h),
+                                               -ranking.index(h)))
+            if best in chosen:
+                break
+            chosen.append(best)
+        for h in ranking:  # degenerate fleets: fill by rank
+            if len(chosen) >= replication:
+                break
+            if h not in chosen:
+                chosen.append(h)
+        return sorted(chosen)
+
+
+# ---------------------------------------------------------------------------
+# hot_aware — popularity-skewed replication factor + wider spread
+# ---------------------------------------------------------------------------
+
+
+@register_placement
+class HotAwarePlacement(PlacementPolicy):
+    """Popularity-aware placement: hot chunks carry a higher replication
+    factor ``r_hot`` whose extra replicas are rebalanced off the home
+    rack, so a hot task's replica set occasionally escapes the hot rack.
+
+    Simulator projection: a hot chunk keeps `NUM_REPLICAS` home replicas
+    in the hot rack plus ``r_hot - NUM_REPLICAS`` rebalanced ones spread
+    uniformly over the other racks; a task's type is `NUM_REPLICAS`
+    distinct replicas drawn without replacement from that pool (Gumbel
+    top-k over the induced per-server weights) — fixed shapes, so the
+    policies and both kernels consume the types unchanged.  Cold tasks
+    stay uniform.  Host projection: hot chunks' extra replicas walk the
+    rendezvous ranking greedily into racks the chunk does not cover yet,
+    padded to ``r_hot`` in the placement map via the max-R + mask
+    convention.  Popularity starts from a deterministic hash prior
+    (`hot_frac` of chunks) and `rebalance()` re-derives the hot set from
+    the read counts observed via `note_read` — the deterministic
+    rebalance step drift scenarios exercise.
+    """
+
+    name = "hot_aware"
+
+    def __init__(self, r_hot: int = 6, hot_frac: float = 0.125):
+        if r_hot < NUM_REPLICAS:
+            raise ValueError(f"r_hot must be >= {NUM_REPLICAS}, got {r_hot}")
+        if not 0.0 < hot_frac <= 1.0:
+            raise ValueError(f"hot_frac must be in (0, 1], got {hot_frac}")
+        self.r_hot = int(r_hot)
+        self.hot_frac = float(hot_frac)
+        self._counts: dict = {}
+        self._hot: Optional[Set[int]] = None  # None -> hash prior
+
+    # -- simulator ----------------------------------------------------------
+    def build_sampler(self, topo: Topology):
+        rack_of = jnp.asarray(topo.rack_of, jnp.int32)
+        m = topo.num_servers
+        extra = float(self.r_hot - NUM_REPLICAS)
+
+        def sample(key, p_hot, hot_rack, batch, rack_weights=None):
+            hot, hot_racks, k = _hot_split(key, p_hot, hot_rack, batch,
+                                           rack_weights)
+            in_hot_rack = rack_of[None, :] == hot_racks[:, None]
+            n_hot = jnp.sum(in_hot_rack, axis=1, keepdims=True)  # (B, 1)
+            n_cold = jnp.maximum(m - n_hot, 1)
+            # per-server replica mass: NUM_REPLICAS home replicas share the
+            # hot rack, the rebalanced extras share everything else
+            w = jnp.where(in_hot_rack, NUM_REPLICAS / n_hot,
+                          jnp.where(m - n_hot > 0, extra / n_cold, 0.0))
+            logits = jnp.where(hot[:, None], jnp.log(w),
+                               jnp.zeros((1, m)))
+            gumbel = jax.random.gumbel(k, (batch, m))
+            _, idx = jax.lax.top_k(logits + gumbel, NUM_REPLICAS)
+            return jnp.sort(idx, axis=1).astype(jnp.int32)
+        return sample
+
+    # -- host ---------------------------------------------------------------
+    def _is_hot(self, chunk_id: int, seed: int) -> bool:
+        if self._hot is not None:
+            return chunk_id in self._hot
+        digest = hashlib.blake2s(f"hot:{seed}:{chunk_id}".encode(),
+                                 digest_size=4).digest()
+        return int.from_bytes(digest, "big") % 10_000 < self.hot_frac * 10_000
+
+    def replicas(self, spec: Topology, chunk_id: int, replication: int,
+                 seed: int) -> List[int]:
+        base = chunk_replicas(chunk_id, spec.num_servers, replication, seed)
+        if not self._is_hot(chunk_id, seed):
+            return base
+        rack = np.asarray(spec.rack_of)
+        target = max(self.r_hot, replication)
+        chosen = list(base)
+        for h in hrw_ranking(chunk_id, spec.num_servers, seed):
+            if len(chosen) >= target:
+                break
+            if h not in chosen and rack[h] not in {rack[c] for c in chosen}:
+                chosen.append(h)  # rebalanced extras land in uncovered racks
+        for h in hrw_ranking(chunk_id, spec.num_servers, seed):
+            if len(chosen) >= target:
+                break
+            if h not in chosen:  # racks exhausted: fill by rank
+                chosen.append(h)
+        return sorted(chosen)
+
+    def max_replication(self, replication: int) -> int:
+        return max(self.r_hot, replication)
+
+    def note_read(self, chunk_id: int) -> None:
+        self._counts[chunk_id] = self._counts.get(chunk_id, 0) + 1
+
+    def state_dict(self):
+        # parallel lists keep the chunk ids intact through JSON (dict keys
+        # would come back as strings)
+        return {"count_ids": sorted(self._counts),
+                "counts": [self._counts[c] for c in sorted(self._counts)],
+                "hot": None if self._hot is None else sorted(self._hot)}
+
+    def load_state_dict(self, s) -> None:
+        self._counts = {int(c): int(n)
+                        for c, n in zip(s["count_ids"], s["counts"])}
+        self._hot = None if s["hot"] is None else {int(c) for c in s["hot"]}
+
+    def rebalance(self) -> int:
+        """Recompute the hot set from the observed read counts: the top
+        ``hot_frac`` fraction of *observed* chunks (ties broken toward the
+        smaller id) become hot.  Deterministic in the count history."""
+        if not self._counts:
+            return 0
+        n_hot = max(1, int(round(self.hot_frac * len(self._counts))))
+        ranked = sorted(self._counts, key=lambda c: (-self._counts[c], c))
+        new_hot = set(ranked[:n_hot])
+        old = self._hot
+        self._hot = new_hot
+        if old is None:
+            return len(new_hot)
+        return len(new_hot.symmetric_difference(old))

@@ -1,0 +1,205 @@
+"""Replica-placement subsystem: where chunk replicas live on the hierarchy.
+
+The paper's whole local / rack-local / remote hierarchy exists because
+each chunk is replicated on a handful of servers — yet *which* servers
+was the one knob the repo still hard-coded: the simulator sampled replica
+sets i.i.d.-uniform (`locality.sample_task_types_at`) and the host fleet
+rendezvous-hashed uniformly (`data.pipeline.chunk_replicas`).  Hadoop's
+own rack-aware placement and replication-factor tuning are known to
+dominate locality outcomes, so placement x scheduling is its own axis of
+the comparison.
+
+A `PlacementPolicy` projects one placement rule onto both execution
+substrates, mirroring the two-sided `SlotPolicy`/`Router` contract of
+`core/policy.py`:
+
+  * **JAX simulator** — `build_sampler(topo)` compiles the policy into a
+    per-task replica *sampling distribution*: a pure function
+    ``sample_types(key, p_hot, hot_rack, batch, rack_weights) ->
+    (batch, NUM_REPLICAS) int32`` with fixed shapes, safe inside
+    `lax.scan`/`vmap`, consuming the same traced per-slot scenario knobs
+    as the classic sampler.  The resulting ``task_locals`` feed every
+    `SlotPolicy` and both Pallas kernels unchanged.
+  * **host fleet** — `replicas(spec, chunk_id, replication, seed)`
+    deterministically places one chunk on the serving-engine / data-
+    pipeline fleet (replacing direct `chunk_replicas` calls), and
+    `placement_map(spec, num_chunks, replication, seed)` materializes
+    the whole catalogue as a padded ``(C, R_max)`` id array plus a
+    ``(C, R_max)`` bool mask — the same max-shape + mask convention the
+    kernels use for variable-size batches, here covering variable
+    replication factors (`hot_aware`).
+
+`@register_placement` mirrors `@register_policy`: registering a class
+makes it instantly selectable by name from `simulate`/`sweep`/
+`run_study`/`placement_study`, the serving engine, the data pipeline,
+the benches and the examples.  The ``"uniform"`` policy reproduces the
+pre-placement behavior **bitwise** on both substrates (pinned by
+tests/test_placement.py), so placement is opt-in with a zero-cost
+default.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import importlib
+from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Mapping,
+                    Tuple, Type, Union)
+
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:  # annotation-only: `repro.core` imports this package
+    from repro.core.locality import Topology  # (via the simulator seam)
+
+# The compiled simulator projection: sample_types(key, p_hot, hot_rack,
+# batch, rack_weights) -> (batch, NUM_REPLICAS) int32, sorted per row.
+TypeSampler = Callable[..., jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementConfig:
+    """Name + per-policy constructor options, e.g.
+    ``PlacementConfig("hot_aware", {"r_hot": 6})`` — the placement
+    analogue of `PolicyConfig`."""
+
+    name: str
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+PlacementLike = Union[str, PlacementConfig, "PlacementPolicy", None]
+
+
+class PlacementPolicy(abc.ABC):
+    """One replica-placement rule, projected onto both substrates.
+
+    Implementations are stateless w.r.t. the simulator (the compiled
+    sampler is a pure function of the topology) but may carry host-side
+    popularity state for deterministic rebalancing (`hot_aware`).
+    """
+
+    name: str = ""
+
+    # -- JAX simulator projection ------------------------------------------
+    @abc.abstractmethod
+    def build_sampler(self, topo: Topology) -> TypeSampler:
+        """Compile this placement against `topo` into a per-task replica
+        sampling distribution (see module docstring for the signature).
+        `p_hot`, `hot_rack` and `rack_weights` may be traced per-slot
+        scenario knobs; shapes must be fixed."""
+
+    # -- host projection ----------------------------------------------------
+    @abc.abstractmethod
+    def replicas(self, spec: Topology, chunk_id: int, replication: int,
+                 seed: int) -> List[int]:
+        """Sorted host ids holding `chunk_id` (length >= `replication` for
+        policies that widen popular chunks; deterministic in all args)."""
+
+    def max_replication(self, replication: int) -> int:
+        """Upper bound over chunks — the R_max the placement map pads to."""
+        return replication
+
+    def placement_map(self, spec: Topology, num_chunks: int,
+                      replication: int, seed: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize the whole catalogue: ``(ids, mask)`` with ids
+        ``(C, R_max) int32`` (pad slots hold the row's first replica so
+        every entry is a valid host id) and mask ``(C, R_max) bool``."""
+        r_max = self.max_replication(replication)
+        ids = np.zeros((num_chunks, r_max), np.int32)
+        mask = np.zeros((num_chunks, r_max), bool)
+        for c in range(num_chunks):
+            locs = self.replicas(spec, c, replication, seed)
+            ids[c, :len(locs)] = locs
+            ids[c, len(locs):] = locs[0]
+            mask[c, :len(locs)] = True
+        return ids, mask
+
+    # -- popularity feedback (optional) -------------------------------------
+    def note_read(self, chunk_id: int) -> None:
+        """Popularity feedback from the host consumers (no-op by default)."""
+
+    def rebalance(self) -> int:
+        """Deterministically re-derive any popularity-driven placement from
+        the counts observed so far; returns the number of chunks whose
+        placement changed (0 for static policies)."""
+        return 0
+
+    # -- checkpointable state ------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-safe popularity state ({} for stateless policies) — part of
+        the data pipeline's checkpoint, so a restored pipeline resumes
+        with the same placement a continuous run would have."""
+        return {}
+
+    def load_state_dict(self, s: Mapping[str, Any]) -> None:
+        if s:
+            raise ValueError(f"{self.name!r} placement carries no state, "
+                             f"got {dict(s)}")
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors core/policy.py)
+# ---------------------------------------------------------------------------
+
+_PLACEMENTS: Dict[str, Type[PlacementPolicy]] = {}
+_BUILTIN_MODULES = ("repro.placement.policies",)
+_builtins_loaded = False
+
+
+def _load_builtins() -> None:
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+    _builtins_loaded = True
+
+
+def register_placement(cls: Type[PlacementPolicy]) -> Type[PlacementPolicy]:
+    """Class decorator: add a PlacementPolicy under `cls.name`."""
+    name = getattr(cls, "name", "")
+    if not name:
+        raise ValueError(f"placement class {cls.__name__} has no `name`")
+    if name in _PLACEMENTS:
+        raise ValueError(f"duplicate placement registration: {name!r}")
+    _PLACEMENTS[name] = cls
+    return cls
+
+
+def available_placements() -> Tuple[str, ...]:
+    _load_builtins()
+    return tuple(sorted(_PLACEMENTS))
+
+
+def placement_descriptions() -> Dict[str, str]:
+    """``{name: one-line description}`` for every registered placement,
+    from the first sentence of each class docstring — the self-describing
+    registry surface behind ``benchmarks/run.py --help``."""
+    from repro.utils.doc import first_doc_line
+    _load_builtins()
+    return {n: first_doc_line(c) for n, c in sorted(_PLACEMENTS.items())}
+
+
+def get_placement_cls(name: str) -> Type[PlacementPolicy]:
+    _load_builtins()
+    try:
+        return _PLACEMENTS[name]
+    except KeyError:
+        raise ValueError(f"unknown placement {name!r}; "
+                         f"registered: {available_placements()}") from None
+
+
+def make_placement(spec: PlacementLike, **options) -> PlacementPolicy:
+    """Resolve a name / PlacementConfig / instance; None -> "uniform"."""
+    if spec is None:
+        spec = "uniform"
+    if isinstance(spec, PlacementPolicy):
+        if options:
+            raise ValueError("options only apply when building by name")
+        return spec
+    if isinstance(spec, PlacementConfig):
+        if options:
+            raise ValueError("options only apply when building by name")
+        spec, options = spec.name, dict(spec.options)
+    return get_placement_cls(spec)(**options)

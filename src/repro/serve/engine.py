@@ -3,9 +3,11 @@
 Cluster model (the paper's data center, one level up the stack):
   * R replica groups ("servers"), grouped into pods ("racks");
   * every request carries a prefix id whose KV/prompt artifacts are resident
-    on 3 replicas (rendezvous placement) — those are its *local* replicas;
-    same-pod replicas are *rack-local* (prefix transfer over ICI), the rest
-    *remote* (DCN);
+    on 3 replicas — placed by the configured `PlacementPolicy`
+    (`repro.placement`, ``EngineConfig.placement``; the "uniform" default
+    is the classic rendezvous placement, bitwise) — those are its *local*
+    replicas; same-pod replicas are *rack-local* (prefix transfer over
+    ICI), the rest *remote* (DCN);
   * the router assigns each incoming request to a replica by weighted
     workload over estimated service rates; rates are measured online per
     (replica, tier) with the EWMA estimator (Blind GB-PANDAS), so a slow or
@@ -47,7 +49,7 @@ from repro.core.cluster import tier_of
 from repro.core.estimator import EwmaRateEstimator
 from repro.core.locality import Topology
 from repro.core.policy import make_router
-from repro.data.pipeline import chunk_replicas
+from repro.placement import PlacementLike, make_placement
 from repro.workloads import (ScenarioLike, Trace, host_playback,
                              make_scenario, trace_from_arrivals)
 from repro.models import params as params_lib, transformer as T
@@ -91,6 +93,15 @@ class EngineConfig:
     # on the engine-step clock; None -> "static" (all multipliers 1.0)
     scenario: ScenarioLike = None
     scenario_horizon: int = 400  # engine steps per playback cycle
+    # replica placement (repro.placement): which replicas hold each
+    # prefix's KV/prompt artifacts.  None -> "uniform" (the classic
+    # rendezvous placement, bitwise identical to the old
+    # `chunk_replicas` calls).
+    placement: PlacementLike = None
+    # deterministic placement rebalance cadence (routed requests between
+    # `PlacementPolicy.rebalance()` calls; 0 disables) — only meaningful
+    # for popularity-driven placements (hot_aware)
+    rebalance_every: int = 0
 
 
 class Replica:
@@ -187,6 +198,14 @@ class ServingEngine:
         self.estimator = EwmaRateEstimator(n_rep, prior)
         self.router = make_router(ecfg.scheduler, self.spec, prior,
                                   estimator=self.estimator, seed=ecfg.seed)
+        # Prefix artifacts live where the placement policy puts them
+        # (uniform == the classic rendezvous placement).
+        self.placement = make_placement(ecfg.placement)
+        if ecfg.rebalance_every < 0:
+            raise ValueError(f"rebalance_every must be >= 0, got "
+                             f"{ecfg.rebalance_every}")
+        self.routed = 0
+        self.rebalanced = 0
         self.replicas = [Replica(cfg, params, ecfg) for _ in range(n_rep)]
         self.queue: deque = deque()            # not-yet-routed arrivals
         self.waiting: List[deque] = [deque()   # routed, awaiting a slot
@@ -225,8 +244,13 @@ class ServingEngine:
     def _route_arrivals(self) -> None:
         while self.queue:
             req = self.queue.popleft()
-            locs = chunk_replicas(req.prefix_id, self.spec.num_servers, 3,
-                                  self.ecfg.seed)
+            locs = self.placement.replicas(self.spec, req.prefix_id, 3,
+                                           self.ecfg.seed)
+            self.placement.note_read(req.prefix_id)
+            self.routed += 1
+            if self.ecfg.rebalance_every and \
+                    self.routed % self.ecfg.rebalance_every == 0:
+                self.rebalanced += self.placement.rebalance()
             req._locs = locs  # type: ignore[attr-defined]
             decision = self.router.route(locs)
             if decision.deferred:

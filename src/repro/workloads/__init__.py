@@ -41,7 +41,11 @@ from repro.workloads.trace import (  # noqa: F401
     trace_to_scenario,
 )
 from repro.workloads.ingest import (  # noqa: F401
+    ALIBABA_BATCH_TASK_COLUMNS,
+    ALIBABA_CONTAINER_COLUMNS,
     GOOGLE_V2_TASK_EVENT_COLUMNS,
+    load_alibaba_cluster_csv,
     load_google_cluster_csv,
+    save_alibaba_cluster_csv,
     save_google_cluster_csv,
 )

@@ -11,6 +11,15 @@ arrival-weight annotations from the ``machine_id`` column (machines are
 hashed onto racks, so key skew in the recorded placement becomes the
 `rack_weights` knob the simulator replays).
 
+The second adapter covers the Alibaba **cluster-trace-v2018** release:
+``batch_task`` rows (second-granularity ``start_time`` stamps, one row
+per task with an instance count) supply the arrival counts, and the
+``container`` table's ``machine_id`` column supplies the per-rack weight
+annotations on the same interval grid — two files because Alibaba splits
+the workload across tables where Google uses one.  Both adapters share
+the machine -> rack hashing and the deterministic-exporter round-trip
+discipline described below.
+
 Everything downstream is free: ``trace_to_scenario`` compiles the result
 into the same piecewise schedule every synthetic scenario uses, so a
 recorded Google trace replays through the simulator, both Pallas kernels,
@@ -204,3 +213,226 @@ def _machine_in_rack(rack: int, num_racks: int) -> str:
         if _rack_of_machine(cand, num_racks) == rack:
             return cand
         i += 1
+
+
+# ---------------------------------------------------------------------------
+# Alibaba cluster-trace-v2018
+# ---------------------------------------------------------------------------
+
+# Alibaba cluster-trace-v2018 column orders (headerless CSVs).
+ALIBABA_BATCH_TASK_COLUMNS = (
+    "task_name", "instance_num", "job_name", "task_type", "status",
+    "start_time", "end_time", "plan_cpu", "plan_mem",
+)
+_AB_INSTANCES, _AB_STATUS, _AB_START = 1, 4, 5
+ALIBABA_CONTAINER_COLUMNS = (
+    "container_id", "machine_id", "time_stamp", "app_du", "status",
+    "cpu_request", "cpu_limit", "mem_size",
+)
+_AC_MACHINE, _AC_TIME = 1, 2
+
+
+def _read_rows(path: Path, min_cols: int, time_col: int, what: str):
+    """Headerless-CSV row iterator shared by the Alibaba tables: yields
+    (line_number, row), tolerating a header row on hand-built shards
+    (probed on the *time* column — the id columns are non-numeric in
+    genuine rows too) and rejecting short rows loudly (a mis-delimited
+    shard must not bin garbage)."""
+    with open(path, newline="") as f:
+        for ln, row in enumerate(csv.reader(f), 1):
+            if not row:
+                continue
+            if ln == 1 and len(row) > time_col and row[time_col].strip() \
+                    and not _is_number(row[time_col]):
+                continue  # header row
+            if len(row) < min_cols:
+                raise ValueError(
+                    f"{path}:{ln}: row has {len(row)} columns, need at "
+                    f"least {min_cols} ({what} layout)")
+            yield ln, row
+
+
+def _is_number(s: str) -> bool:
+    try:
+        float(s)
+        return True
+    except ValueError:
+        return False
+
+
+def load_alibaba_cluster_csv(batch_task_path: Union[str, Path], *,
+                             container_path: Optional[Union[str, Path]]
+                             = None,
+                             interval: float = 300.0,
+                             name: Optional[str] = None,
+                             use_instances: bool = False,
+                             num_intervals: Optional[int] = None,
+                             num_racks: Optional[int] = None) -> Trace:
+    """Read Alibaba cluster-trace-v2018 shards into a `Trace`.
+
+    batch_task_path -- ``batch_task`` CSV: each row's ``start_time``
+                       (seconds) is one arrival (or ``instance_num``
+                       arrivals with ``use_instances=True``); rows whose
+                       start_time is empty or 0 (tasks that never
+                       started) are skipped
+    container_path  -- optional ``container`` table: its ``machine_id``
+                       column, binned by ``time_stamp`` onto the same
+                       interval grid, yields per-rack arrival weights
+                       (requires ``num_racks``; intervals with no
+                       container events fall back to uniform)
+    num_intervals   -- as in `load_google_cluster_csv`: pass explicitly
+                       to keep trailing zero-arrival intervals
+
+    The two tables are one recorded cluster: the horizon covers the last
+    event of either, and events past a forced ``num_intervals`` horizon
+    are rejected.
+    """
+    batch_task_path = Path(batch_task_path)
+    if not batch_task_path.exists():
+        raise FileNotFoundError(f"no trace file at {batch_task_path}")
+    if interval <= 0:
+        raise ValueError(f"interval must be > 0, got {interval}")
+    if container_path is not None and num_racks is None:
+        raise ValueError("container_path needs num_racks to derive "
+                         "rack weights")
+    times: list = []
+    weights_n: list = []
+    for ln, row in _read_rows(batch_task_path, _AB_START + 1, _AB_START,
+                              "alibaba batch_task"):
+        raw = row[_AB_START].strip()
+        if raw in ("", "0"):
+            continue  # task never started
+        try:
+            t = float(raw)
+            n = int(float(row[_AB_INSTANCES])) if use_instances and \
+                row[_AB_INSTANCES].strip() else 1
+        except ValueError:
+            raise ValueError(
+                f"{batch_task_path}:{ln}: unparseable start_time/"
+                f"instance_num {row[_AB_START]!r}/"
+                f"{row[_AB_INSTANCES]!r}") from None
+        if t < 0:
+            raise ValueError(f"{batch_task_path}:{ln}: negative "
+                             f"start_time {t}")
+        times.append(t)
+        weights_n.append(max(n, 1))
+    if not times:
+        raise ValueError(f"{batch_task_path}: no started batch tasks")
+    times_arr = np.asarray(times, np.float64)
+    counts_arr = np.asarray(weights_n, np.int64)
+
+    c_times: list = []
+    c_machines: list = []
+    if container_path is not None:
+        container_path = Path(container_path)
+        if not container_path.exists():
+            raise FileNotFoundError(f"no trace file at {container_path}")
+        for ln, row in _read_rows(container_path, _AC_TIME + 1, _AC_TIME,
+                                  "alibaba container"):
+            raw = row[_AC_TIME].strip()
+            if not raw:
+                continue
+            try:
+                t = float(raw)
+            except ValueError:
+                raise ValueError(f"{container_path}:{ln}: unparseable "
+                                 f"time_stamp {row[_AC_TIME]!r}") from None
+            if t < 0:
+                raise ValueError(f"{container_path}:{ln}: negative "
+                                 f"time_stamp {t}")
+            machine = row[_AC_MACHINE].strip()
+            if machine:
+                c_times.append(t)
+                c_machines.append(machine)
+
+    t_max = max([times_arr.max()] + (c_times or []))
+    n = num_intervals if num_intervals is not None \
+        else int(np.floor(t_max / interval)) + 1
+    if n < 1:
+        raise ValueError(f"num_intervals must be >= 1, got {n}")
+    horizon = n * interval
+    if t_max >= horizon:
+        raise ValueError(f"{batch_task_path}: event at {t_max:.0f}s falls "
+                         f"outside the {n} x {interval:.0f}s horizon")
+    bins = np.minimum((times_arr / interval).astype(np.int64), n - 1)
+    arrivals = np.zeros(n, np.float64)
+    np.add.at(arrivals, bins, counts_arr.astype(np.float64))
+
+    rack_weights = None
+    if container_path is not None:
+        if num_racks < 1:
+            raise ValueError(f"num_racks must be >= 1, got {num_racks}")
+        rack_weights = np.zeros((n, num_racks), np.float64)
+        for t, machine in zip(c_times, c_machines):
+            b = min(int(t / interval), n - 1)
+            rack_weights[b, _rack_of_machine(machine, num_racks)] += 1.0
+        empty = rack_weights.sum(axis=1) == 0
+        rack_weights[empty] = 1.0  # uniform where placement is unknown
+        rack_weights /= rack_weights.sum(axis=1, keepdims=True)
+
+    return Trace(name=name or batch_task_path.stem,
+                 interval=float(interval), arrivals=arrivals,
+                 rack_weights=rack_weights)
+
+
+def save_alibaba_cluster_csv(trace: Trace,
+                             batch_task_path: Union[str, Path], *,
+                             container_path: Optional[Union[str, Path]]
+                             = None) -> Path:
+    """Write a trace as Alibaba cluster-trace-v2018 shards: one
+    ``batch_task`` row per counted arrival (``instance_num = 1``, evenly
+    spaced inside its interval) and — when the trace carries
+    `rack_weights` and a ``container_path`` is given — one container row
+    per arrival whose machine_id is drawn from a per-rack pool
+    (largest-remainder apportionment, mirroring the Google exporter), so
+    ``load_alibaba_cluster_csv(..., container_path=..., num_racks=R)``
+    recovers the annotation.  Deterministic; trailing zero-arrival
+    intervals need ``num_intervals=`` at reload, as with Google.
+
+    The single event that would land exactly on ``start_time == 0`` (the
+    loader skips never-started tasks) is shifted to half its interval
+    sub-step instead — still inside interval 0 at any interval length.
+    """
+    batch_task_path = Path(batch_task_path)
+    if trace.rack_weights is not None and container_path is None:
+        raise ValueError("trace carries rack_weights: pass container_path "
+                         "to preserve them (or strip the weights)")
+    num_racks = (None if trace.rack_weights is None
+                 else int(trace.rack_weights.shape[1]))
+    rows_c = []
+    with open(batch_task_path, "w", newline="") as f:
+        w = csv.writer(f)
+        task = 0
+        for i, count in enumerate(np.asarray(trace.arrivals)):
+            count = int(round(float(count)))
+            if count <= 0:
+                continue
+            t0 = i * trace.interval
+            step = trace.interval / count
+            if num_racks is None:
+                racks = [None] * count
+            else:
+                weights = np.asarray(trace.rack_weights[i], np.float64)
+                frac = weights / weights.sum() * count
+                quota = np.floor(frac).astype(int)
+                for j in np.argsort(-(frac - quota))[: count - quota.sum()]:
+                    quota[j] += 1
+                racks = [r for r, q in enumerate(quota) for _ in range(q)]
+            for j in range(count):
+                t = t0 + j * step
+                if t <= 0.0:
+                    t = 0.5 * step  # 0 would read back as never-started
+                task += 1
+                w.writerow([f"task_{task}", 1, f"j_{task}", 1, "Terminated",
+                            f"{t:.6f}", f"{t + step:.6f}", 100, 0.5])
+                if racks[j] is not None:
+                    rows_c.append((f"c_{task}",
+                                   _machine_in_rack(racks[j], num_racks),
+                                   f"{t:.6f}", "du_1", "started",
+                                   4, 4, 1.0))
+    if container_path is not None:
+        with open(container_path, "w", newline="") as f:
+            w = csv.writer(f)
+            for row in rows_c:
+                w.writerow(row)
+    return batch_task_path

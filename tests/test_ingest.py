@@ -1,5 +1,6 @@
-"""Google cluster-usage v2 ingest adapter: column mapping, binning,
-rack-weight derivation, and the export -> ingest round-trip."""
+"""Cluster-trace ingest adapters (Google cluster-usage v2, Alibaba
+cluster-trace-v2018): column mapping, binning, rack-weight derivation,
+and the export -> ingest round-trips."""
 
 import csv
 
@@ -7,9 +8,13 @@ import numpy as np
 import pytest
 
 from repro import workloads as wl
-from repro.workloads.ingest import (GOOGLE_V2_SUBMIT,
+from repro.workloads.ingest import (ALIBABA_BATCH_TASK_COLUMNS,
+                                    ALIBABA_CONTAINER_COLUMNS,
+                                    GOOGLE_V2_SUBMIT,
                                     GOOGLE_V2_TASK_EVENT_COLUMNS,
+                                    load_alibaba_cluster_csv,
                                     load_google_cluster_csv,
+                                    save_alibaba_cluster_csv,
                                     save_google_cluster_csv)
 
 
@@ -110,3 +115,129 @@ def test_google_roundtrip_without_weights(tmp_path):
     out = sim.simulate("balanced_pandas", cfg, 2.0, est, seed=0,
                        scenario=wl.trace_to_scenario(back))
     assert np.isfinite(out["mean_delay"])
+
+
+# ------------------------------------------------------------- alibaba ----
+
+def _batch_task(start_time, instances=1, status="Terminated"):
+    try:
+        end = float(start_time) + 5
+    except (TypeError, ValueError):
+        end = ""
+    row = [f"t_{start_time}", instances, "j_1", 1, status,
+           start_time, end, 100, 0.5]
+    assert len(row) == len(ALIBABA_BATCH_TASK_COLUMNS)
+    return row
+
+
+def _container(time_stamp, machine):
+    row = [f"c_{time_stamp}", machine, time_stamp, "du_1", "started",
+           4, 4, 1.0]
+    assert len(row) == len(ALIBABA_CONTAINER_COLUMNS)
+    return row
+
+
+def test_alibaba_bins_batch_tasks(tmp_path):
+    p = tmp_path / "batch_task.csv"
+    _write_events(p, [
+        _batch_task(1), _batch_task(30), _batch_task(59),   # interval 0
+        _batch_task(61),                                    # interval 1
+        _batch_task(130, instances=7),                      # interval 2
+        _batch_task(0),      # never started: skipped
+        _batch_task(""),     # no start time: skipped
+    ])
+    tr = load_alibaba_cluster_csv(p, interval=60.0)
+    np.testing.assert_array_equal(tr.arrivals, [3, 1, 1])
+    assert tr.rack_weights is None
+    # instance-weighted arrivals count every instance of a task
+    tr2 = load_alibaba_cluster_csv(p, interval=60.0, use_instances=True)
+    np.testing.assert_array_equal(tr2.arrivals, [3, 1, 7])
+    # the result is an ordinary Trace: it compiles
+    scn = wl.trace_to_scenario(tr, max_segments=8)
+    assert abs(scn.mean_lam_mult - 1.0) < 1e-9
+
+
+def test_alibaba_container_rack_weights(tmp_path):
+    bt = tmp_path / "batch_task.csv"
+    ct = tmp_path / "container.csv"
+    _write_events(bt, [_batch_task(10), _batch_task(70), _batch_task(80)])
+    # all interval-0 containers on one machine; interval 1 has none
+    _write_events(ct, [_container(5, "ali-m1"), _container(6, "ali-m1")])
+    tr = load_alibaba_cluster_csv(bt, container_path=ct, interval=60.0,
+                                  num_racks=4)
+    assert tr.rack_weights.shape == (2, 4)
+    assert sorted(tr.rack_weights[0].tolist(), reverse=True)[0] == 1.0
+    np.testing.assert_allclose(tr.rack_weights[1], 0.25)
+    with pytest.raises(ValueError, match="num_racks"):
+        load_alibaba_cluster_csv(bt, container_path=ct, interval=60.0)
+
+
+def test_alibaba_rejects_malformed_rows(tmp_path):
+    p = tmp_path / "bad.csv"
+    _write_events(p, [["t_1", 1, "j_1"]])  # too few columns
+    with pytest.raises(ValueError, match="columns"):
+        load_alibaba_cluster_csv(p)
+    _write_events(p, [_batch_task(1), _batch_task("not-a-time")])
+    with pytest.raises(ValueError, match="unparseable"):
+        load_alibaba_cluster_csv(p)
+    _write_events(p, [_batch_task(0)])
+    with pytest.raises(ValueError, match="no started"):
+        load_alibaba_cluster_csv(p)  # nothing ever starts
+    with pytest.raises(FileNotFoundError):
+        load_alibaba_cluster_csv(tmp_path / "missing.csv")
+    # tolerated header row (both name columns non-numeric)
+    with open(p, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(ALIBABA_BATCH_TASK_COLUMNS)
+        w.writerow(_batch_task(10))
+    tr = load_alibaba_cluster_csv(p, interval=60.0)
+    np.testing.assert_array_equal(tr.arrivals, [1])
+
+
+def test_alibaba_csv_roundtrip(tmp_path):
+    arr = np.array([4.0, 0.0, 8.0, 2.0])
+    rw = np.array([[0.25, 0.75], [0.5, 0.5], [0.5, 0.5], [1.0, 0.0]])
+    tr = wl.Trace("ali", interval=300.0, arrivals=arr, rack_weights=rw)
+    bt = tmp_path / "batch_task.csv"
+    ct = tmp_path / "container.csv"
+    # weights without a container path would be silently dropped: refuse
+    with pytest.raises(ValueError, match="container_path"):
+        save_alibaba_cluster_csv(tr, bt)
+    save_alibaba_cluster_csv(tr, bt, container_path=ct)
+    back = load_alibaba_cluster_csv(bt, container_path=ct, interval=300.0,
+                                    num_racks=2, num_intervals=4)
+    np.testing.assert_array_equal(back.arrivals, arr)
+    # interval 1 had no arrivals -> uniform fallback; others exact
+    np.testing.assert_allclose(back.rack_weights[0], rw[0])
+    np.testing.assert_allclose(back.rack_weights[2], rw[2])
+    np.testing.assert_allclose(back.rack_weights[3], rw[3])
+    np.testing.assert_allclose(back.rack_weights[1], 0.5)
+
+
+def test_alibaba_roundtrip_without_weights_and_replay(tmp_path):
+    rng = np.random.default_rng(1)
+    tr = wl.Trace("plain-ali", interval=60.0,
+                  arrivals=rng.poisson(15.0, 12).astype(np.float64))
+    bt = tmp_path / "batch_task.csv"
+    save_alibaba_cluster_csv(tr, bt)
+    back = load_alibaba_cluster_csv(bt, interval=60.0, num_intervals=12)
+    np.testing.assert_array_equal(back.arrivals, tr.arrivals)
+    # the full loop closes: ingest -> compile -> simulate
+    from repro.core import locality as loc, simulator as sim
+    cfg = sim.SimConfig(topo=loc.Topology(12, 4), true_rates=loc.Rates(),
+                        max_arrivals=16, horizon=400, warmup=100)
+    est = sim.make_estimates(cfg, "network", 0.0, -1)
+    out = sim.simulate("balanced_pandas", cfg, 2.0, est, seed=0,
+                       scenario=wl.trace_to_scenario(back))
+    assert np.isfinite(out["mean_delay"])
+
+
+def test_alibaba_subsecond_interval_roundtrip(tmp_path):
+    """Regression: the exporter used to clamp every start_time to >= 1s,
+    corrupting any trace with interval <= 1."""
+    tr = wl.Trace("fast", interval=0.5,
+                  arrivals=np.array([2.0, 3.0, 0.0, 1.0]))
+    bt = tmp_path / "batch_task.csv"
+    save_alibaba_cluster_csv(tr, bt)
+    back = load_alibaba_cluster_csv(bt, interval=0.5, num_intervals=4)
+    np.testing.assert_array_equal(back.arrivals, tr.arrivals)
