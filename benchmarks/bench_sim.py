@@ -99,3 +99,40 @@ def bench_placement(fast: bool = True):
                          f"topology={label},K={topo.num_tiers},"
                          f"M={topo.num_servers},horizon={horizon}"))
     return rows
+
+
+def bench_replication(fast: bool = True):
+    """Replication-lifecycle throughput: simulator slots/sec of the default
+    policy under every registered replication controller, with the
+    server_loss scenario engaged so the lifecycle machinery (chunk
+    catalogue, migration lanes, repair scans) is actually in the scan body.
+
+    The `fixed`+static row is the bitwise-pinned passthrough (no lifecycle
+    state in the carry at all), included as the zero-cost reference.
+    """
+    import jax
+    from repro.core import locality as loc, simulator as sim
+    from repro.replication import available_replications
+
+    horizon = 2_000 if fast else 20_000
+    topo, rates = loc.Topology(24, 6), loc.Rates()
+    cfg = sim.SimConfig(topo=topo, true_rates=rates, p_hot=0.5,
+                        max_arrivals=24, horizon=horizon,
+                        warmup=horizon // 4)
+    cap = loc.capacity_hot_rack(topo, rates, cfg.p_hot)
+    est = sim.make_estimates(cfg, "network", 0.0, -1)
+    args = (np.float32(0.7 * cap), est.astype(np.float32), np.uint32(0))
+    arms = [("fixed", "static")]
+    arms += [(ctrl, "server_loss") for ctrl in available_replications()]
+    rows = []
+    for ctrl, scen in arms:
+        run = jax.jit(sim._build_run("balanced_pandas", cfg, scenario=scen,
+                                     replication=ctrl))
+        jax.block_until_ready(run(*args))  # compile
+        dt = min(_timed(run, args) for _ in range(3))
+        rows.append((f"sim_slots_per_sec_replication_{ctrl}_{scen}",
+                     horizon / dt,
+                     f"replication={ctrl},scenario={scen},"
+                     f"policy=balanced_pandas,K={topo.num_tiers},"
+                     f"M={topo.num_servers},horizon={horizon}"))
+    return rows

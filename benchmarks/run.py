@@ -20,7 +20,7 @@ from pathlib import Path
 
 def _registry_epilog() -> str:
     """Render the scenario/policy/placement registries for --help."""
-    from repro import placement as plc, workloads as wl
+    from repro import placement as plc, replication as rep, workloads as wl
     from repro.core import policy as pol
 
     def block(title, entries):
@@ -36,6 +36,8 @@ def _registry_epilog() -> str:
                    pol.router_descriptions())
     lines += block("registered replica placements (simulator / engine / "
                    "pipeline)", plc.placement_descriptions())
+    lines += block("registered replication controllers (lifecycle: "
+                   "migration / repair)", rep.replication_descriptions())
     return "\n".join(lines)
 
 
@@ -50,7 +52,7 @@ def main() -> None:
                     help="paper-scale horizons (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig34,fig56,drift,kernels,"
-                         "sim_throughput,placement,serving,"
+                         "sim_throughput,placement,replication,serving,"
                          "serving_scenarios,trace_replay,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="additionally write every bench row as a "
@@ -97,6 +99,7 @@ def main() -> None:
     section("kernels", lambda: bench_kernels.bench(fast))
     section("sim_throughput", lambda: bench_sim.bench(fast))
     section("placement", lambda: bench_sim.bench_placement(fast))
+    section("replication", lambda: bench_sim.bench_replication(fast))
     section("serving", lambda: bench_serving.bench(fast))
     section("serving_scenarios", lambda: bench_serving.bench_scenarios(fast))
     section("trace_replay", lambda: bench_serving.replay_trace(

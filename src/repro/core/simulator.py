@@ -51,6 +51,7 @@ from repro.core import locality as loc
 from repro.core.policy import PolicyLike, make_policy
 from repro import workloads as wl
 from repro.placement import PlacementLike, make_placement
+from repro.replication import ReplicationLike, make_replication
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,7 +120,8 @@ def make_estimates(cfg: SimConfig, mode: str, eps: float, sign: int,
 
 def _build_run(policy_like: PolicyLike, cfg: SimConfig,
                scenario: wl.ScenarioLike = None,
-               placement: PlacementLike = None):
+               placement: PlacementLike = None,
+               replication: ReplicationLike = None):
     """Returns jit-able run(lam_total, est(M,3), seed) -> metrics dict.
 
     `scenario` (name / ScenarioConfig / Scenario; None -> "static") compiles
@@ -130,15 +132,32 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
     "uniform") compiles to the per-task replica sampling distribution
     (`repro.placement`) the arrival stream draws task types from; the
     default reproduces the classic i.i.d.-uniform draws bitwise.
+
+    `replication` (name / ReplicationConfig / ReplicationController; None
+    -> "fixed") selects the replication-lifecycle controller
+    (`repro.replication`).  The machinery only engages when the
+    controller is dynamic or the scenario carries a failure track
+    (``server_loss`` / ``rack_loss``) — a compile-time Python fact, so
+    ``"fixed"`` with no failures runs the exact pre-replication step and
+    stays bitwise-identical (same keys, same metrics keys; pinned by
+    tests/test_replication.py).  In machinery mode the lifecycle rides
+    the scan carry: dead servers serve at rate 0 and lose their
+    replicas, migration endpoints serve at the contention multiplier,
+    and availability / data-loss metrics join the output dict.
     """
     policy = make_policy(policy_like)
     topo, true_rates = cfg.topo, cfg.true_rates
     rack_of = jnp.asarray(topo.rack_of, jnp.int32)
     ancestors = jnp.asarray(topo.ancestors, jnp.int32)  # (depth, M)
     true_k = true_rates.as_array()
-    sample_types = make_placement(placement).build_sampler(topo)
+    plc = make_placement(placement)
+    sample_types = plc.build_sampler(topo)
     sched = wl.compile_schedule(wl.make_scenario(scenario), topo,
                                 cfg.horizon, cfg.p_hot)
+    ctrl = make_replication(replication)
+    rep_sim = None
+    if not (ctrl.is_static and sched.alive is None):
+        rep_sim = ctrl.build_sim(topo, np.asarray(true_rates.values), plc)
     # Little's-law denominator: the offered rate over the measurement
     # window is lam_total x the window's mean arrival multiplier (exactly
     # 1.0 for the static scenario and any unit-mean modulation).
@@ -149,7 +168,7 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
         base = jax.random.PRNGKey(seed)
 
         def step(carry, t):
-            state, mean_n, n_meas, completions = carry
+            state, mean_n, n_meas, completions = carry[:4]
             knobs = wl.slot_knobs(sched, t)
             key_t = jax.random.fold_in(base, t)
             k_arr, k_algo = jax.random.split(key_t)
@@ -161,6 +180,12 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
                 knobs.hot_rack, cfg.max_arrivals, knobs.rack_weights,
                 type_sampler=sample_types)
             true_mk = true_k[None, :] * knobs.rate_mult
+            if rep_sim is not None:
+                alive = knobs.alive if knobs.alive is not None \
+                    else jnp.ones(topo.num_servers, jnp.float32)
+                rep_state, fg_mult = rep_sim.step(
+                    carry[4], alive, key_t, active, t >= cfg.warmup)
+                true_mk = true_mk * fg_mult[:, None]
             state, compl = policy.slot_step(state, k_algo, types, active,
                                             est, true_mk, ancestors)
             n = policy.num_in_system(state).astype(jnp.float32)
@@ -168,11 +193,16 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             n_meas = n_meas + in_window
             mean_n = mean_n + in_window * (n - mean_n) / jnp.maximum(n_meas, 1.0)
             completions = completions + compl * (t >= cfg.warmup)
-            return (state, mean_n, n_meas, completions), ()
+            out_carry = (state, mean_n, n_meas, completions)
+            if rep_sim is not None:
+                out_carry += (rep_state,)
+            return out_carry, ()
 
         carry0 = (init(), jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0))
-        (state, mean_n, n_meas, completions), _ = jax.lax.scan(
-            step, carry0, jnp.arange(cfg.horizon))
+        if rep_sim is not None:
+            carry0 += (rep_sim.init(),)
+        carry, _ = jax.lax.scan(step, carry0, jnp.arange(cfg.horizon))
+        state, mean_n, n_meas, completions = carry[:4]
         # Little's law needs a positive offered rate; lam_total == 0 used
         # to divide straight to inf — flag it as NaN instead (the host-side
         # drivers additionally reject negative loads outright).
@@ -184,6 +214,8 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             "final_n": policy.num_in_system(state).astype(jnp.float32),
         }
         out.update(policy.extra_metrics(state))
+        if rep_sim is not None:
+            out.update(rep_sim.metrics(carry[4]))
         return out
 
     return run
@@ -192,13 +224,14 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
 def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
              est: np.ndarray, seed: int = 0,
              scenario: wl.ScenarioLike = None,
-             placement: PlacementLike = None) -> Dict[str, Any]:
+             placement: PlacementLike = None,
+             replication: ReplicationLike = None) -> Dict[str, Any]:
     """Single-configuration run (jit-compiled).  ``lam_total == 0`` yields
     ``mean_delay = NaN`` (Little's law is undefined); negative loads are
     rejected here."""
     if lam_total < 0:
         raise ValueError(f"lam_total must be >= 0, got {lam_total}")
-    run = jax.jit(_build_run(policy, cfg, scenario, placement))
+    run = jax.jit(_build_run(policy, cfg, scenario, placement, replication))
     out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
               jnp.asarray(seed, jnp.uint32))
     return {k: float(v) for k, v in out.items()}
@@ -207,17 +240,19 @@ def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
 def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
           est_stack: np.ndarray, seeds: np.ndarray,
           scenario: wl.ScenarioLike = None,
-          placement: PlacementLike = None) -> Dict[str, np.ndarray]:
+          placement: PlacementLike = None,
+          replication: ReplicationLike = None) -> Dict[str, np.ndarray]:
     """Full cartesian sweep, vmapped: results have shape (L, E, S).
 
     lam_grid: (L,) loads; est_stack: (E, M, K); seeds: (S,).  The scenario
-    schedule and the compiled placement sampler are closure constants —
-    their shapes carry no batch dimension, so the whole grid still
-    compiles to one vmapped XLA program.
+    schedule, the compiled placement sampler, and the replication
+    machinery are closure constants — their shapes carry no batch
+    dimension, so the whole grid still compiles to one vmapped XLA
+    program (the lifecycle state vmaps through the scan carry).
     """
     if np.any(np.asarray(lam_grid) < 0):
         raise ValueError(f"lam_grid must be >= 0, got {lam_grid}")
-    run = _build_run(policy, cfg, scenario, placement)
+    run = _build_run(policy, cfg, scenario, placement, replication)
     f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),
                  (0, None, None))
     f = jax.jit(f)

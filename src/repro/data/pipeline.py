@@ -39,6 +39,7 @@ from repro.core.policy import make_router
 from repro.placement import PlacementLike, make_placement
 from repro.placement.policies import chunk_replicas  # noqa: F401  (canonical
 # home is the placement subsystem; re-exported for the long-standing name)
+from repro.replication import ReplicationLike, make_replication
 from repro.workloads import ScenarioLike, host_playback, make_scenario
 
 
@@ -78,6 +79,14 @@ class PipelineConfig:
     # hosts and congestion windows; None -> "static" (multipliers 1.0)
     scenario: ScenarioLike = None
     scenario_horizon: float = 256.0  # virtual-time units per playback cycle
+    # replication lifecycle (repro.replication): chunk replica sets become
+    # time-varying — wiped on host death, repaired / widened by the
+    # selected controller under the migration bandwidth cap.  None ->
+    # "fixed"; the machinery only engages when a dynamic controller is
+    # selected or the scenario carries a failure track, so the default
+    # read path stays bitwise identical.  (`replication` above is the
+    # *factor*; this picks the *controller*.)
+    replication_policy: ReplicationLike = None
 
 
 def chunk_tokens(cfg: PipelineConfig, chunk_id: int) -> np.ndarray:
@@ -136,7 +145,17 @@ class DataPipeline:
         # straggler hosts / congested links during read windows.
         self.playback = host_playback(make_scenario(cfg.scenario),
                                       n_hosts, cfg.scenario_horizon,
-                                      num_tiers=self.spec.num_tiers)
+                                      num_tiers=self.spec.num_tiers,
+                                      rack_of=np.asarray(self.spec.rack_of))
+        # Replication lifecycle over the chunk catalogue: engaged only when
+        # a controller is configured or the scenario kills hosts.
+        ctrl = make_replication(cfg.replication_policy)
+        if ctrl.is_static and self.playback.alive is None:
+            self.replication_ctl = None
+        else:
+            self.replication_ctl = ctrl.build_host(
+                self.spec, self.placement, cfg.num_chunks, cfg.replication,
+                cfg.seed, self.prior)
         self.rng = np.random.default_rng(cfg.seed + 1)
         self._clock = 0.0
         self.metrics = {"local": 0, "rack": 0, "remote": 0,
@@ -150,18 +169,47 @@ class DataPipeline:
 
     # -- scheduling ---------------------------------------------------------
     def _read_chunk(self, chunk_id: int) -> np.ndarray:
-        locs = self.placement.replicas(self.spec, chunk_id,
-                                       self.cfg.replication, self.cfg.seed)
+        if self.replication_ctl is not None:
+            # advance the lifecycle to the virtual clock, then read from
+            # the live catalogue; an all-dead chunk falls back to the
+            # static placement (cold-store refetch, counted as lost)
+            self.replication_ctl.observe(
+                self._clock, self.playback.alive_mask_at(self._clock))
+            self.replication_ctl.note_read(chunk_id)
+            locs = self.replication_ctl.replicas_for(chunk_id)
+            self.metrics["lost_reads"] = self.replication_ctl.lost_reads
+            self.metrics["repair_moves"] = self.replication_ctl.moves
+            if not locs:
+                locs = self.placement.replicas(self.spec, chunk_id,
+                                               self.cfg.replication,
+                                               self.cfg.seed)
+        else:
+            locs = self.placement.replicas(self.spec, chunk_id,
+                                           self.cfg.replication,
+                                           self.cfg.seed)
         decision = self.router.route(locs)
         # Deferred-assignment routers (global queue) pick the host only at
         # claim time; the synchronous pipeline stands in for "whichever host
         # goes idle next" with a uniform draw.
         host = decision.worker if not decision.deferred \
             else int(self.rng.integers(self.spec.num_servers))
+        if self.replication_ctl is not None \
+                and not self.replication_ctl.is_alive(host):
+            # failover: a dead host cannot serve — retry on the first live
+            # replica (or any live host for an all-dead set)
+            live = [h for h in locs if self.replication_ctl.is_alive(h)] \
+                or [h for h in range(self.spec.num_servers)
+                    if self.replication_ctl.is_alive(h)]
+            host = live[0]
+            self.metrics["failovers"] = self.metrics.get("failovers", 0) + 1
         tier = tier_of(self.spec, locs, host)
         rate = float(self.prior[tier])
         rate *= self.slow.get(host, 1.0)
         rate *= self.playback.rate_mult_at(self._clock, host, tier)
+        if self.replication_ctl is not None:
+            # migration endpoints serve foreground reads at the
+            # contention multiplier while a copy is in flight
+            rate *= self.replication_ctl.contention_mult(host)
         service = float(self.rng.exponential(1.0 / max(rate, 1e-6)))
         self._clock += service
         self.router.claim(host)  # drain the queued task (read runs now)
@@ -206,9 +254,12 @@ class DataPipeline:
         # `reads` drives the rebalance cadence and `placement` carries the
         # popularity state (hot_aware), so a restored pipeline places and
         # rebalances exactly like the uninterrupted run would have.
-        return {"cursor": self._cursor, "buffer": self._buffer.copy(),
-                "clock": self._clock, "reads": int(self.metrics["reads"]),
-                "placement": self.placement.state_dict()}
+        out = {"cursor": self._cursor, "buffer": self._buffer.copy(),
+               "clock": self._clock, "reads": int(self.metrics["reads"]),
+               "placement": self.placement.state_dict()}
+        if self.replication_ctl is not None:
+            out["replication"] = self.replication_ctl.state_dict()
+        return out
 
     def load_state_dict(self, s: Dict) -> None:
         self._cursor = int(s["cursor"])
@@ -218,6 +269,12 @@ class DataPipeline:
         self.metrics["reads"] = int(s.get("reads", self.metrics["reads"]))
         if s.get("placement"):
             self.placement.load_state_dict(s["placement"])
+        if s.get("replication"):
+            if self.replication_ctl is None:
+                raise ValueError("checkpoint carries replication-lifecycle "
+                                 "state but this pipeline has no controller "
+                                 "configured (replication_policy)")
+            self.replication_ctl.load_state_dict(s["replication"])
 
     @property
     def locality_fractions(self) -> Tuple[float, float, float]:

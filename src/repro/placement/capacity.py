@@ -59,9 +59,14 @@ def placement_capacity(topo: Topology, rates: Union[Rates, Sequence[float]],
     try:
         import scipy.optimize as sopt
         import scipy.sparse as ssp
-    except ImportError:
+    except ImportError as e:
         if strict:
-            raise
+            raise ImportError(
+                "placement_capacity solves a fluid LP and needs scipy, "
+                "which is an *optional* dependency of repro.placement "
+                "(everything else in the package runs without it).  "
+                "Install scipy, or pass strict=False to get None instead."
+            ) from e
         return None
     from repro.core.cluster import worker_tiers
     from repro.core.locality import Rates

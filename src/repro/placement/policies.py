@@ -369,14 +369,22 @@ class HotAwarePlacement(PlacementPolicy):
         return max(self.r_hot, replication)
 
     def note_read(self, chunk_id: int) -> None:
+        # Coerce to a plain int: callers hand over numpy integers (batch
+        # indices, prefix ids), and a np.int64 key would poison
+        # state_dict() — json.dumps of the checkpoint manifest crashes on
+        # numpy scalars, killing the trainer's save mid-run.
+        chunk_id = int(chunk_id)
         self._counts[chunk_id] = self._counts.get(chunk_id, 0) + 1
 
     def state_dict(self):
         # parallel lists keep the chunk ids intact through JSON (dict keys
-        # would come back as strings)
-        return {"count_ids": sorted(self._counts),
-                "counts": [self._counts[c] for c in sorted(self._counts)],
-                "hot": None if self._hot is None else sorted(self._hot)}
+        # would come back as strings); values re-coerced to plain ints so
+        # the dict stays json.dumps-safe whatever fed note_read
+        keys = sorted(self._counts)
+        return {"count_ids": [int(c) for c in keys],
+                "counts": [int(self._counts[c]) for c in keys],
+                "hot": None if self._hot is None
+                else [int(c) for c in sorted(self._hot)]}
 
     def load_state_dict(self, s) -> None:
         self._counts = {int(c): int(n)

@@ -1,0 +1,22 @@
+"""Replication lifecycle: migration, adaptive replication, and
+failure/recovery as first-class actions on both substrates.
+
+See `repro.replication.lifecycle` for the controller contract and the
+`MigrationModel`, `repro.replication.controllers` for the built-ins
+(``fixed`` / ``repair`` / ``popularity``), `repro.replication.simproj`
+for the fixed-shape `lax.scan` machinery, and `repro.replication.host`
+for the engine / pipeline mirror.
+"""
+
+from repro.replication.lifecycle import (  # noqa: F401
+    MigrationModel,
+    ReplicationConfig,
+    ReplicationController,
+    ReplicationLike,
+    available_replications,
+    get_replication_cls,
+    make_replication,
+    register_replication,
+    replication_descriptions,
+)
+from repro.replication.host import HostReplication  # noqa: F401

@@ -1,0 +1,107 @@
+"""Built-in replication controllers, registered by name.
+
+Each controller reduces to one function — the target replica count per
+chunk — evaluated on both substrates from the same inputs (liveness and
+read popularity).  The lifecycle machinery (wipe / repair / drop /
+migrate under the bandwidth cap) is shared; see
+`repro.replication.simproj` and `repro.replication.host`.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.replication.lifecycle import (ReplicationController,
+                                         register_replication)
+
+
+@register_replication
+class FixedReplication(ReplicationController):
+    """The paper's static default: every chunk keeps whatever replicas the
+    placement policy gave it — never migrates, widens, or repairs.  With
+    no failure scenario this is bitwise-identical to the pre-replication
+    code path (the lifecycle machinery is skipped entirely); under
+    ``server_loss`` / ``rack_loss`` it only *observes* the damage, which
+    is exactly what makes it the availability baseline."""
+
+    name = "fixed"
+    is_static = True
+
+    def sim_targets(self, pop, live, base_tgt):
+        # Target == live: deficits and surpluses are both zero by
+        # construction, so the machinery never starts a move or drops a
+        # replica — failures just reduce `live` (and the target with it).
+        return live
+
+    def host_targets(self, counts: Mapping[int, int], live: np.ndarray,
+                     base_tgt: np.ndarray) -> np.ndarray:
+        return live.astype(np.int64)
+
+
+@register_replication
+class RepairReplication(ReplicationController):
+    """Failure-driven re-replication: after a server or rack dies, rebuild
+    every chunk back to its initial replication factor from the surviving
+    copies, paying migration bandwidth through the repair lanes.  The
+    ``lanes`` cap is the repair-bandwidth budget — a storm after a rack
+    loss queues behind it and contends with foreground traffic instead of
+    saturating the fabric (HDFS-style re-replication)."""
+
+    name = "repair"
+
+    def sim_targets(self, pop, live, base_tgt):
+        return base_tgt
+
+    def host_targets(self, counts: Mapping[int, int], live: np.ndarray,
+                     base_tgt: np.ndarray) -> np.ndarray:
+        return base_tgt.astype(np.int64)
+
+
+@register_replication
+class PopularityReplication(ReplicationController):
+    """Adaptive replication factor: chunks in the top ``hot_frac`` of
+    (decayed) read popularity hold ``r_hot`` replicas, the rest ``r_cold``
+    — extra copies of hot data buy locality and failure headroom where
+    reads actually land, at the cost of migration bandwidth when
+    popularity drifts.  Subsumes repair: a dead replica of any chunk is
+    rebuilt toward the popularity-driven target."""
+
+    name = "popularity"
+
+    def __init__(self, r_hot: int = 5, r_cold: int = 3,
+                 hot_frac: float = 0.125, decay: float = 0.02, **common):
+        super().__init__(**common)
+        if r_cold < 1 or r_hot < r_cold:
+            raise ValueError(f"need 1 <= r_cold <= r_hot, "
+                             f"got r_cold={r_cold}, r_hot={r_hot}")
+        if not 0.0 < hot_frac < 1.0:
+            raise ValueError(f"hot_frac must be in (0, 1), got {hot_frac}")
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        self.r_hot = int(r_hot)
+        self.r_cold = int(r_cold)
+        self.hot_frac = float(hot_frac)
+        self.decay = float(decay)
+
+    def max_target(self, base: int) -> int:
+        return max(int(base), self.r_hot)
+
+    def sim_targets(self, pop, live, base_tgt):
+        thr = jnp.quantile(pop, 1.0 - self.hot_frac)
+        hot = (pop >= thr) & (pop > 0.0)
+        return jnp.where(hot, self.r_hot, self.r_cold).astype(live.dtype)
+
+    def host_targets(self, counts: Mapping[int, int], live: np.ndarray,
+                     base_tgt: np.ndarray) -> np.ndarray:
+        tgt = np.full(live.shape[0], self.r_cold, np.int64)
+        if counts:
+            n_hot = max(1, round(self.hot_frac * len(counts)))
+            # ties toward the smaller chunk id, mirroring hot_aware
+            ranked = sorted(counts, key=lambda c: (-counts[c], c))
+            for c in ranked[:n_hot]:
+                if 0 <= c < tgt.shape[0]:
+                    tgt[c] = self.r_hot
+        return tgt

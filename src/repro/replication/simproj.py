@@ -1,0 +1,246 @@
+"""Fixed-shape replication lifecycle for the `lax.scan` simulator.
+
+The machinery tracks an explicit chunk catalogue — ``ids (C, R) int32``
+replica hosts plus a ``mask (C, R) bool`` liveness map, materialized
+once from the placement policy — and evolves it every slot:
+
+  wipe    -- replicas on dead servers (scenario ``alive`` track) vanish;
+  commit  -- in-flight moves whose countdown hit zero land on their
+             destination (moves with a dead endpoint are killed);
+  drop    -- surplus replicas over the controller's target are released
+             for free (rank-order within the row, keep the first
+             ``target`` live copies);
+  start   -- the largest-deficit chunks claim free migration lanes, a
+             live source, and the least-loaded eligible destination; the
+             move then occupies both endpoints for
+             ``ceil(chunk_size / rate[pair_tier(src, dst)])`` slots
+             (`MigrationModel`), multiplying their foreground TRUE rates
+             by the contention factor while it runs.
+
+Everything is fixed-shape and branch-free: L migration lanes (the
+repair-bandwidth cap) are a static unrolled loop, catalogue scatters go
+through a scratch row (index C) so lanes that did not commit write
+nowhere, and the whole state is a NamedTuple threaded through the
+simulator's scan carry — `sweep()` still vmaps the load x error x seed
+grid over it untouched.
+
+Chunk reads are sampled per-slot from a static Zipf(``read_skew``)
+popularity over chunk ids with a dedicated fold of the slot key, so the
+foreground arrival stream (and every policy's routing randomness) keeps
+the exact same random bits as a run without replication — common random
+numbers hold across controllers.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import locality as loc
+
+#: fold_in tag for the chunk-read sub-stream of each slot key (disjoint
+#: from the (k_arr, k_algo) split the simulator already consumes).
+READ_KEY_TAG = 0x5EED
+
+
+class RepState(NamedTuple):
+    """Lifecycle state threaded through the scan carry (fixed shapes)."""
+
+    ids: jnp.ndarray         # (C+1, R) int32 replica hosts (row C: scratch)
+    mask: jnp.ndarray        # (C+1, R) bool  live replicas (row C: False)
+    pop: jnp.ndarray         # (C,) f32 decayed read counts
+    lane_chunk: jnp.ndarray  # (L,) int32 chunk being moved (C = idle)
+    lane_slot: jnp.ndarray   # (L,) int32 catalogue column being filled
+    lane_src: jnp.ndarray    # (L,) int32 source server
+    lane_dst: jnp.ndarray    # (L,) int32 destination server
+    lane_left: jnp.ndarray   # (L,) f32 slots remaining (0 = idle)
+    ever_lost: jnp.ndarray   # (C,) bool chunk ever had zero live replicas
+    moves: jnp.ndarray       # () i32 committed moves
+    dropped: jnp.ndarray     # () i32 surplus replicas released
+    lost_tasks: jnp.ndarray  # () i32 in-window arrivals for dead chunks
+    busy_slots: jnp.ndarray  # () f32 server-slots occupied by migration
+    max_conc: jnp.ndarray    # () i32 peak concurrent moves (<= L)
+    avail_sum: jnp.ndarray   # () f32 window sum of availability
+    repl_sum: jnp.ndarray    # () f32 window sum of mean replication
+    win_cnt: jnp.ndarray     # () f32 measured slots
+
+
+class SimReplication:
+    """Compiled lifecycle machinery for one controller on one topology."""
+
+    def __init__(self, ctrl, topo, tier_rates, placement):
+        self.ctrl = ctrl
+        base = min(loc.NUM_REPLICAS, topo.num_servers)
+        ids, mask = placement.placement_map(topo, ctrl.num_chunks, base,
+                                            ctrl.catalogue_seed)
+        r_max = max(ids.shape[1], ctrl.max_target(base))
+        if r_max > ids.shape[1]:  # widen for controllers that over-replicate
+            pad = r_max - ids.shape[1]
+            ids = np.concatenate(
+                [ids, np.repeat(ids[:, :1], pad, axis=1)], axis=1)
+            mask = np.concatenate(
+                [mask, np.zeros((mask.shape[0], pad), bool)], axis=1)
+        self.C, self.R = ids.shape
+        self.L = ctrl.lanes
+        self.M = topo.num_servers
+        # scratch row C: catalogue scatters from non-committing lanes land
+        # here (the kernels' max-shape + guard-row idiom)
+        self.ids0 = jnp.asarray(
+            np.concatenate([ids, np.zeros((1, self.R), np.int32)]))
+        self.mask0 = jnp.asarray(
+            np.concatenate([mask, np.zeros((1, self.R), bool)]))
+        self.base_tgt = jnp.asarray(mask.sum(1).astype(np.int32))
+        self.ancestors = topo.ancestors
+        self.cost_table = jnp.asarray(
+            ctrl.migration.cost_table(tier_rates))
+        self.contention = ctrl.migration.contention
+        self.decay = float(getattr(ctrl, "decay", 0.02))
+        # static Zipf read popularity over chunk ids (0 = uniform)
+        w = (np.arange(self.C, dtype=np.float64) + 1.0) ** -ctrl.read_skew
+        self.read_logits = jnp.asarray(np.log(w / w.sum()), jnp.float32)
+
+    def init(self) -> RepState:
+        i32, f32 = jnp.int32, jnp.float32
+        z = lambda: jnp.zeros((), i32)  # noqa: E731
+        zf = lambda: jnp.zeros((), f32)  # noqa: E731
+        return RepState(
+            ids=self.ids0, mask=self.mask0,
+            pop=jnp.zeros(self.C, f32),
+            lane_chunk=jnp.full(self.L, self.C, i32),
+            lane_slot=jnp.zeros(self.L, i32),
+            lane_src=jnp.zeros(self.L, i32),
+            lane_dst=jnp.zeros(self.L, i32),
+            lane_left=jnp.zeros(self.L, f32),
+            ever_lost=jnp.zeros(self.C, bool),
+            moves=z(), dropped=z(), lost_tasks=z(),
+            busy_slots=zf(), max_conc=z(),
+            avail_sum=zf(), repl_sum=zf(), win_cnt=zf())
+
+    def step(self, st: RepState, alive: jnp.ndarray, key: jnp.ndarray,
+             active: jnp.ndarray, in_window: jnp.ndarray):
+        """One slot of lifecycle; returns ``(state, fg_mult)`` where
+        ``fg_mult (M,)`` multiplies the foreground TRUE rates (0 for dead
+        servers, ``contention`` for busy migration endpoints)."""
+        i32, f32 = jnp.int32, jnp.float32
+        C, R, L = self.C, self.R, self.L
+        alive_b = alive > 0.5
+        ids, mask = st.ids, st.mask
+
+        # wipe: replicas on dead servers are gone (and stay gone until a
+        # repair move recreates them — recovery restores the server, empty)
+        mask = mask & alive_b[ids]
+
+        # lanes: kill moves with a dead endpoint, then advance survivors
+        live_lane = (st.lane_left > 0.0) \
+            & alive_b[st.lane_src] & alive_b[st.lane_dst]
+        n_act = jnp.sum(live_lane.astype(i32))
+        busy = jnp.zeros(self.M, i32) \
+            .at[st.lane_src].max(live_lane.astype(i32)) \
+            .at[st.lane_dst].max(live_lane.astype(i32)) > 0
+        left = jnp.where(live_lane, st.lane_left - 1.0, 0.0)
+        commit = live_lane & (left <= 0.0)
+        wc = jnp.where(commit, st.lane_chunk, C)  # scratch row if no commit
+        ids = ids.at[wc, st.lane_slot].set(
+            jnp.where(commit, st.lane_dst, ids[wc, st.lane_slot]))
+        mask = mask.at[wc, st.lane_slot].max(commit)
+
+        # reads: skewed chunk popularity on a dedicated key fold (the
+        # foreground arrival/routing streams keep their exact bits)
+        k_read = jax.random.fold_in(key, READ_KEY_TAG)
+        c_ids = jax.random.categorical(k_read, self.read_logits,
+                                       shape=active.shape)
+        reads = jnp.zeros(C, f32).at[c_ids].add(active.astype(f32))
+        pop = (1.0 - self.decay) * st.pop + reads
+        live = mask[:C].sum(1).astype(i32)
+        lost_now = jnp.sum((active & (live[c_ids] == 0)).astype(i32))
+
+        # targets and free drops (keep the first `tgt` live replicas)
+        tgt = jnp.clip(self.ctrl.sim_targets(pop, live, self.base_tgt),
+                       1, R).astype(i32)
+        tgt_ext = jnp.concatenate([tgt, jnp.full((1,), R, i32)])
+        rank = jnp.cumsum(mask.astype(i32), axis=1)
+        keep = mask & (rank <= tgt_ext[:, None])
+        n_dropped = jnp.sum(mask[:C].astype(i32)) \
+            - jnp.sum(keep[:C].astype(i32))
+        mask = keep
+        live = mask[:C].sum(1).astype(i32)
+
+        # deficit-driven move starts: largest deficit first (ties toward
+        # the smaller chunk id), budgeted per slot, one destination slot
+        # per in-flight move, bandwidth-capped by the L lanes themselves
+        infl = jnp.zeros(C + 1, i32).at[st.lane_chunk].add(
+            (left > 0.0).astype(i32))
+        deficit = jnp.clip(tgt - live - infl[:C], 0, R)
+        deficit = jnp.where(live > 0, deficit, 0)  # need a live source
+        held = jnp.zeros(self.M, f32).at[ids[:C]].add(mask[:C].astype(f32))
+        taken = mask.astype(i32).at[st.lane_chunk, st.lane_slot].max(
+            (left > 0.0).astype(i32))
+        lane_chunk, lane_slot = st.lane_chunk, st.lane_slot
+        lane_src, lane_dst = st.lane_src, st.lane_dst
+        started = jnp.zeros((), i32)
+        score_tie = jnp.arange(C, dtype=f32)
+        for i in range(L):  # static unroll: L is the bandwidth cap
+            can = deficit > 0
+            score = deficit.astype(f32) * (C + 1.0) - score_tie
+            c = jnp.argmax(jnp.where(can, score, -jnp.inf)).astype(i32)
+            row_ids, row_mask = ids[c], mask[c]
+            slot = jnp.argmin(taken[c]).astype(i32)
+            src = row_ids[jnp.argmax(row_mask)]
+            holders = jnp.zeros(self.M, i32).at[row_ids].add(
+                row_mask.astype(i32))
+            pending = jnp.zeros(self.M, i32).at[lane_dst].add(
+                ((left > 0.0) & (lane_chunk == c)).astype(i32))
+            eligible = alive_b & (holders == 0) & (pending == 0)
+            dst = jnp.argmin(jnp.where(eligible, held, jnp.inf)).astype(i32)
+            ok = (left[i] <= 0.0) & jnp.any(can) & jnp.any(eligible) \
+                & (started < self.ctrl.moves_per_slot)
+            cost = self.cost_table[loc.pair_tiers(src, dst, self.ancestors)]
+            lane_chunk = lane_chunk.at[i].set(
+                jnp.where(ok, c, lane_chunk[i]))
+            lane_slot = lane_slot.at[i].set(jnp.where(ok, slot, lane_slot[i]))
+            lane_src = lane_src.at[i].set(jnp.where(ok, src, lane_src[i]))
+            lane_dst = lane_dst.at[i].set(jnp.where(ok, dst, lane_dst[i]))
+            left = left.at[i].set(jnp.where(ok, cost, left[i]))
+            deficit = deficit.at[c].add(-ok.astype(i32))
+            held = held.at[dst].add(ok.astype(f32))
+            taken = taken.at[c, slot].max(ok.astype(i32))
+            started = started + ok.astype(i32)
+
+        in_w = in_window.astype(f32)
+        new_st = RepState(
+            ids=ids, mask=mask, pop=pop,
+            lane_chunk=lane_chunk, lane_slot=lane_slot,
+            lane_src=lane_src, lane_dst=lane_dst, lane_left=left,
+            ever_lost=st.ever_lost | (live == 0),
+            moves=st.moves + jnp.sum(commit.astype(i32)),
+            dropped=st.dropped + n_dropped,
+            lost_tasks=st.lost_tasks
+            + jnp.where(in_window, lost_now, 0).astype(i32),
+            busy_slots=st.busy_slots + 2.0 * n_act.astype(f32),
+            max_conc=jnp.maximum(st.max_conc, n_act),
+            avail_sum=st.avail_sum + in_w * jnp.mean((live > 0).astype(f32)),
+            repl_sum=st.repl_sum + in_w * jnp.mean(live.astype(f32)),
+            win_cnt=st.win_cnt + in_w)
+        fg_mult = alive * jnp.where(busy, self.contention, 1.0)
+        return new_st, fg_mult
+
+    def metrics(self, st: RepState):
+        """Availability / data-loss / migration metrics, all f32 scalars
+        (merged into the simulator's output dict in machinery mode)."""
+        f32 = jnp.float32
+        win = jnp.maximum(st.win_cnt, 1.0)
+        live = st.mask[:self.C].sum(1)
+        return {
+            "availability": st.avail_sum / win,
+            "data_loss_frac": jnp.mean(st.ever_lost.astype(f32)),
+            "mean_replication": st.repl_sum / win,
+            "final_replication": jnp.mean(live.astype(f32)),
+            "repair_moves": st.moves.astype(f32),
+            "dropped_replicas": st.dropped.astype(f32),
+            "lost_tasks": st.lost_tasks.astype(f32),
+            "migration_busy_slots": st.busy_slots,
+            "max_concurrent_moves": st.max_conc.astype(f32),
+        }

@@ -50,8 +50,14 @@ from repro.core.estimator import EwmaRateEstimator
 from repro.core.locality import Topology
 from repro.core.policy import make_router
 from repro.placement import PlacementLike, make_placement
+from repro.replication import ReplicationLike, make_replication
 from repro.workloads import (ScenarioLike, Trace, host_playback,
                              make_scenario, trace_from_arrivals)
+
+# Observed-service-time inflation for a request admitted on a DEAD replica
+# (failure scenarios): large enough that the EWMA estimator sheds the
+# replica within a few observations, finite so the engine still drains.
+DEAD_SLOWDOWN = 25.0
 from repro.models import params as params_lib, transformer as T
 from repro.models.config import ModelConfig
 
@@ -102,6 +108,15 @@ class EngineConfig:
     # `PlacementPolicy.rebalance()` calls; 0 disables) — only meaningful
     # for popularity-driven placements (hot_aware)
     rebalance_every: int = 0
+    # replication lifecycle (repro.replication): migration, adaptive
+    # replication and failure repair over the prefix catalogue.  None ->
+    # "fixed"; the lifecycle machinery only engages when a dynamic
+    # controller is selected or the scenario carries a failure track
+    # (server_loss / rack_loss), so the default stays bitwise identical.
+    replication: ReplicationLike = None
+    # prefix-catalogue size tracked by the replication lifecycle
+    # (prefix ids wrap mod this when the lifecycle is active)
+    num_prefixes: int = 64
 
 
 class Replica:
@@ -217,7 +232,19 @@ class ServingEngine:
         # `slow_replicas` dict but time-varying (stragglers open and close).
         self.playback = host_playback(make_scenario(ecfg.scenario),
                                       n_rep, float(ecfg.scenario_horizon),
-                                      num_tiers=self.spec.num_tiers)
+                                      num_tiers=self.spec.num_tiers,
+                                      rack_of=np.asarray(self.spec.rack_of))
+        # Replication lifecycle: engaged only when a controller is
+        # configured or the scenario kills servers — otherwise replica
+        # lookups go straight to the placement policy (bitwise pinned).
+        ctrl = make_replication(ecfg.replication)
+        if ctrl.is_static and self.playback.alive is None:
+            self.replication = None
+        else:
+            self.replication = ctrl.build_host(
+                self.spec, self.placement, ecfg.num_prefixes, 3,
+                ecfg.seed, prior)
+        self.lost_routes = 0  # arrivals whose prefix had no live replica
         self.steps = 0
         self.assign_tiers = {t: 0 for t in range(self.spec.num_tiers)}
         # engine-step index of every submit, for trace export (recorded_trace)
@@ -244,8 +271,19 @@ class ServingEngine:
     def _route_arrivals(self) -> None:
         while self.queue:
             req = self.queue.popleft()
-            locs = self.placement.replicas(self.spec, req.prefix_id, 3,
-                                           self.ecfg.seed)
+            if self.replication is not None:
+                # live replica set from the lifecycle catalogue; an
+                # all-dead prefix falls back to the placement's static
+                # set (a cold-store refetch) and counts as a lost route
+                locs = self.replication.replicas_for(req.prefix_id)
+                self.replication.note_read(req.prefix_id)
+                if not locs:
+                    self.lost_routes += 1
+                    locs = self.placement.replicas(self.spec, req.prefix_id,
+                                                   3, self.ecfg.seed)
+            else:
+                locs = self.placement.replicas(self.spec, req.prefix_id, 3,
+                                               self.ecfg.seed)
             self.placement.note_read(req.prefix_id)
             self.routed += 1
             if self.ecfg.rebalance_every and \
@@ -277,6 +315,12 @@ class ServingEngine:
                 self.replicas[req.replica].admit(req)
                 slow = self.slow.get(req.replica, 1.0) * self.playback.slowdown(
                     self.steps, req.replica, req.tier)
+                if self.replication is not None:
+                    # migration endpoints serve slower (contention); dead
+                    # replicas inflate hard so the EWMA sheds them
+                    slow /= self.replication.contention_mult(req.replica)
+                    if not self.replication.is_alive(req.replica):
+                        slow *= DEAD_SLOWDOWN
                 elapsed = (time.monotonic() - t0) * slow
                 self.router.on_complete(req.replica, req.tier,
                                         max(elapsed, 1e-4))
@@ -285,6 +329,9 @@ class ServingEngine:
     def step(self) -> None:
         """One engine tick: route arrivals, admit into free slots, one decode
         step on every replica."""
+        if self.replication is not None:
+            self.replication.observe(float(self.steps),
+                                     self.playback.alive_mask_at(self.steps))
         self._route_arrivals()
         self._admit()
         for rep in self.replicas:

@@ -102,6 +102,17 @@ class Trainer:
         return self.history
 
 
-def _np_to_list(d: Dict) -> Dict:
-    return {k: (v.tolist() if isinstance(v, np.ndarray) else v)
-            for k, v in d.items()}
+def _np_to_list(v):
+    """JSON-safe view of a pipeline state dict: numpy arrays and scalars
+    become lists / plain Python numbers at every nesting level — the
+    replication-lifecycle state is a dict of dicts, and json.dumps of the
+    checkpoint manifest rejects any numpy type it meets."""
+    if isinstance(v, dict):
+        return {k: _np_to_list(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_np_to_list(x) for x in v]
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, np.generic):
+        return v.item()
+    return v

@@ -131,6 +131,47 @@ def stragglers(servers: Sequence[int] = (0, 1), factor: float = 0.25,
     ))
 
 
+@register_scenario("server_loss")
+def server_loss(servers: Sequence[int] = (0, 1), start: float = 0.35,
+                width: float = 0.3) -> Scenario:
+    """Server failure window: `servers` are DEAD (zero service rate, all
+    hosted replicas wiped) during [start, start+width) and rejoin empty
+    afterwards — the availability / data-loss event the paper's 3x
+    replication exists to survive.  A replication controller must re-create
+    the lost replicas from the survivors, paying migration bandwidth."""
+    if not servers:
+        raise ValueError("server_loss needs at least one server id")
+    if not 0.0 < start < start + width < 1.0:
+        raise ValueError(f"failure window [{start}, {start + width}) must "
+                         f"sit strictly inside (0, 1)")
+    down = tuple(int(s) for s in servers)
+    return Scenario("server_loss", (
+        Segment(start=0.0),
+        Segment(start=start, down_servers=down),
+        Segment(start=start + width),
+    ))
+
+
+@register_scenario("rack_loss")
+def rack_loss(racks: Sequence[int] = (0,), start: float = 0.35,
+              width: float = 0.25) -> Scenario:
+    """Rack failure window: every server in `racks` is DEAD (replicas
+    wiped) during [start, start+width) — the correlated-failure case that
+    motivates spreading replicas across racks.  Rack ids wrap mod the rack
+    count and resolve through the consumer's rack_of map at compile time."""
+    if not racks:
+        raise ValueError("rack_loss needs at least one rack id")
+    if not 0.0 < start < start + width < 1.0:
+        raise ValueError(f"failure window [{start}, {start + width}) must "
+                         f"sit strictly inside (0, 1)")
+    down = tuple(int(r) for r in racks)
+    return Scenario("rack_loss", (
+        Segment(start=0.0),
+        Segment(start=start, down_racks=down),
+        Segment(start=start + width),
+    ))
+
+
 @register_scenario("rack_congestion")
 def rack_congestion(beta_mult: float = 0.6, gamma_mult: float = 0.5,
                     start: float = 0.4, width: float = 0.4) -> Scenario:

@@ -83,6 +83,13 @@ class Segment:
                     addresses each tier exactly.
     slow_servers -- {server_id: rate_mult} per-server TRUE-rate multipliers
                     (straggler windows; ids taken mod fleet size at compile)
+    down_servers -- server ids DEAD during this segment: rate 0, replicas
+                    wiped (ids taken mod fleet size at compile).  Death is a
+                    separate track from slow_servers because a dead server
+                    loses its data — stragglers only serve it slowly.
+    down_racks   -- rack ids whose every server is dead during this segment
+                    (ids taken mod rack count at compile; resolved through
+                    the topology's ``rack_of`` map)
     """
 
     start: float
@@ -92,6 +99,8 @@ class Segment:
     tier_mult: Tuple[float, ...] = (1.0, 1.0, 1.0)
     slow_servers: Mapping[int, float] = dataclasses.field(default_factory=dict)
     rack_weights: Optional[Tuple[float, ...]] = None
+    down_servers: Tuple[int, ...] = ()
+    down_racks: Tuple[int, ...] = ()
 
     def __post_init__(self):
         if not 0.0 <= self.start < 1.0:
@@ -114,6 +123,12 @@ class Segment:
                 raise ValueError(f"rack_weights must be non-negative with a "
                                  f"positive sum, got {self.rack_weights}")
             object.__setattr__(self, "rack_weights", w)
+        for field in ("down_servers", "down_racks"):
+            ids = getattr(self, field)
+            if any(not isinstance(i, numbers.Integral) or i < 0 for i in ids):
+                raise ValueError(f"{field} must be non-negative server/rack "
+                                 f"ids, got {ids}")
+            object.__setattr__(self, field, tuple(int(i) for i in ids))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -253,16 +268,21 @@ def _resize_weights(w: Sequence[float], num_racks: int) -> Tuple[float, ...]:
 
 def _dense_segments(scn: Scenario, num_workers: int, num_racks: int,
                     base_p_hot: float, num_tiers: int = 3,
-                    materialize_weights: bool = True):
+                    materialize_weights: bool = True, rack_of=None):
     """Numpy per-segment arrays:
-    (starts, lam, p_hot, hot_rack, tier, server, rack_weights).
+    (starts, lam, p_hot, hot_rack, tier, server, rack_weights, alive).
 
     starts are fractions in [0, 1); tier is (S, K); server is (S, M);
     rack_weights is (S, R) — or None when no segment opts into per-rack
     weights (the bitwise-pinned classic hot_rack path) or the caller
     does not consume the locality knobs (`materialize_weights=False`,
     the host projection — weights must not be resized/validated against
-    a rack count the host side does not have).
+    a rack count the host side does not have).  alive is (S, M) bool —
+    or None when no segment declares failures (a compile-time fact both
+    projections branch on in Python, keeping the failure-free paths
+    bitwise identical to the pre-replication code).  ``down_racks``
+    resolve through ``rack_of`` (server -> rack map); scenarios that use
+    them require the caller to supply it.
     """
     s_count = len(scn.segments)
     starts = np.array([s.start for s in scn.segments], np.float64)
@@ -289,7 +309,31 @@ def _dense_segments(scn: Scenario, num_workers: int, num_racks: int,
             else:
                 weights[i] = _resize_weights(seg.rack_weights,
                                              max(num_racks, 1))
-    return starts, lam, p_hot, hot, tier, server, weights
+    if all(not s.down_servers and not s.down_racks for s in scn.segments):
+        alive = None
+    else:
+        alive = np.ones((s_count, num_workers), bool)
+        for i, seg in enumerate(scn.segments):
+            for sid in seg.down_servers:
+                alive[i, sid % num_workers] = False
+            if seg.down_racks:
+                if rack_of is None:
+                    raise ValueError(
+                        "scenario uses down_racks but this consumer did not "
+                        "supply a server->rack map; pass rack_of= (e.g. the "
+                        "topology's rack_of) to resolve rack failures")
+                rk = np.asarray(rack_of)
+                if rk.shape != (num_workers,):
+                    raise ValueError(f"rack_of must have shape "
+                                     f"({num_workers},), got {rk.shape}")
+                n_racks = int(rk.max()) + 1
+                for rid in seg.down_racks:
+                    alive[i, rk == rid % n_racks] = False
+            if not alive[i].any():
+                raise ValueError(
+                    f"segment {i} of scenario {scn.name!r} kills every "
+                    f"server — at least one must survive")
+    return starts, lam, p_hot, hot, tier, server, weights, alive
 
 
 # ---------------------------------------------------------------------------
@@ -311,6 +355,8 @@ class Schedule(NamedTuple):
     hot_rack: jnp.ndarray   # (S,) int32 rack receiving hot traffic
     rate_mult: jnp.ndarray  # (S, M, K) f32 TRUE-rate multiplier per server/tier
     rack_weights: Optional[jnp.ndarray] = None  # (S, R) f32 arrival weights
+    alive: Optional[jnp.ndarray] = None  # (S, M) f32 1=alive, 0=dead; None
+    #                                      when no segment declares failures
 
 
 class SlotKnobs(NamedTuple):
@@ -321,6 +367,7 @@ class SlotKnobs(NamedTuple):
     hot_rack: jnp.ndarray   # () int32
     rate_mult: jnp.ndarray  # (M, K) f32
     rack_weights: Optional[jnp.ndarray] = None  # (R,) f32 or None
+    alive: Optional[jnp.ndarray] = None  # (M,) f32 or None
 
 
 def compile_schedule(scn: Scenario, topo, horizon: int,
@@ -328,9 +375,9 @@ def compile_schedule(scn: Scenario, topo, horizon: int,
     """Compile a scenario against a `Topology` and a slot horizon.  The
     topology fixes both the rack count (hot_rack wrap, rack_weights width)
     and the tier count K of the rate-multiplier track."""
-    starts, lam, p_hot, hot, tier, server, weights = _dense_segments(
+    starts, lam, p_hot, hot, tier, server, weights, alive = _dense_segments(
         scn, topo.num_servers, topo.num_racks, base_p_hot,
-        num_tiers=topo.num_tiers)
+        num_tiers=topo.num_tiers, rack_of=np.asarray(topo.rack_of))
     knots = np.floor(starts * horizon).astype(np.int32)
     knots[0] = 0
     rate = server[:, :, None] * tier[:, None, :]  # (S, M, K)
@@ -341,6 +388,7 @@ def compile_schedule(scn: Scenario, topo, horizon: int,
         hot_rack=jnp.asarray(hot),
         rate_mult=jnp.asarray(rate),
         rack_weights=None if weights is None else jnp.asarray(weights),
+        alive=None if alive is None else jnp.asarray(alive, jnp.float32),
     )
 
 
@@ -355,7 +403,8 @@ def slot_knobs(sched: Schedule, t: jnp.ndarray) -> SlotKnobs:
     return SlotKnobs(lam_mult=sched.lam_mult[i], p_hot=sched.p_hot[i],
                      hot_rack=sched.hot_rack[i], rate_mult=sched.rate_mult[i],
                      rack_weights=None if sched.rack_weights is None
-                     else sched.rack_weights[i])
+                     else sched.rack_weights[i],
+                     alive=None if sched.alive is None else sched.alive[i])
 
 
 def mean_lam_mult_over(sched: Schedule, start_slot: int,
@@ -404,10 +453,24 @@ class HostPlayback:
     lam_mult: np.ndarray     # (S,)
     tier_mult: np.ndarray    # (S, K)
     server_mult: np.ndarray  # (S, M)
+    alive: Optional[np.ndarray] = None  # (S, M) bool; None = no failures
 
     def _seg(self, t: float) -> int:
         u = (float(t) % self.horizon) / self.horizon
         return int(np.searchsorted(self.starts, u, side="right")) - 1
+
+    def alive_at(self, t: float, worker: int) -> bool:
+        """Whether `worker` is up at time `t` (always True for scenarios
+        without a failure track)."""
+        if self.alive is None:
+            return True
+        return bool(self.alive[self._seg(t), worker])
+
+    def alive_mask_at(self, t: float) -> np.ndarray:
+        """(M,) bool liveness mask at time `t`."""
+        if self.alive is None:
+            return np.ones(self.server_mult.shape[1], bool)
+        return self.alive[self._seg(t)]
 
     def lam_mult_at(self, t: float) -> float:
         return float(self.lam_mult[self._seg(t)])
@@ -429,21 +492,23 @@ class HostPlayback:
 
 
 def host_playback(scn: Scenario, num_workers: int, horizon: float,
-                  num_tiers: int = 3) -> HostPlayback:
+                  num_tiers: int = 3, rack_of=None) -> HostPlayback:
     """Project a scenario to host-side numpy playback over `num_workers`
     with `num_tiers` locality tiers (the fleet Topology's ``num_tiers``).
 
     Host consumers (engine, pipeline, benches) place work by rendezvous
     hashing, so only the arrival-rate and fault tracks are materialized —
     the locality knobs (p_hot / hot_rack / rack_weights) are simulator-only.
+    ``rack_of`` (server -> rack map, e.g. ``ClusterSpec.rack_of``) is only
+    needed when the scenario uses ``down_racks``.
     """
     if not (isinstance(horizon, numbers.Real) and horizon > 0):
         raise ValueError(f"playback horizon must be > 0, got {horizon}")
-    starts, lam, _p_hot, _hot, tier, server, _w = _dense_segments(
+    starts, lam, _p_hot, _hot, tier, server, _w, alive = _dense_segments(
         scn, num_workers, num_racks=1, base_p_hot=0.5, num_tiers=num_tiers,
-        materialize_weights=False)
+        materialize_weights=False, rack_of=rack_of)
     return HostPlayback(horizon=float(horizon), starts=starts, lam_mult=lam,
-                        tier_mult=tier, server_mult=server)
+                        tier_mult=tier, server_mult=server, alive=alive)
 
 
 def arrival_steps(playback: HostPlayback, n_requests: int,
