@@ -29,7 +29,11 @@ from typing import Optional
 import numpy as np
 
 
-def bench(fast: bool = True):
+def bench(fast: bool = True, tracer=None):
+    """Per-(scheduler, setting) drain-time rows plus wall-clock request
+    latency percentiles (``*_lat_p50/p95/p99``, milliseconds from submit
+    to final token).  `tracer` (repro.telemetry.EventRecorder) threads
+    into every engine for structured route/admit/decode event traces."""
     import jax
     from repro.configs import registry
     from repro.core.policy import available_routers
@@ -56,7 +60,7 @@ def bench(fast: bool = True):
             ecfg = EngineConfig(num_replicas=4, replicas_per_pod=2,
                                 slots_per_replica=2, max_len=64,
                                 prefill_buckets=(16,), scheduler=scheduler,
-                                **kw)
+                                tracer=tracer, **kw)
             eng = ServingEngine(cfg, prm, ecfg, slow_replicas=slow)
             reqs = [Request(rid=i, prompt=p, max_new_tokens=4,
                             prefix_id=i % 5)
@@ -65,6 +69,12 @@ def bench(fast: bool = True):
             rows.append((f"serve_{scheduler}_{setting}",
                          float(eng.steps),
                          f"tiers={eng.assign_tiers}"))
+            lat_ms = np.sort([(r.finish_time - r.arrival) * 1e3
+                              for r in reqs])
+            for q in (50, 95, 99):
+                rows.append((f"serve_{scheduler}_{setting}_lat_p{q}",
+                             float(np.percentile(lat_ms, q)),
+                             "ms, wall-clock submit -> final token"))
     return rows
 
 

@@ -10,6 +10,14 @@ on a 4-tier pod topology of the same fleet size.
 Rows come back in the orchestrator's ``(name, value, derived)`` format;
 ``benchmarks/run.py --json`` additionally serializes them into the
 machine-readable perf record CI uploads (the bench trajectory's seed).
+Every arm reports BOTH a steady-state rate row (``sim_slots_per_sec_*``,
+min-of-3 on the already-compiled executable) and a compile-time row
+(``sim_compile_sec_*``, the XLA lowering+compile step timed separately
+via AOT compilation) — so a compile-time regression can't hide inside a
+throughput number or vice versa.  Pass an
+`repro.telemetry.EventRecorder` as ``tracer`` to additionally wrap the
+compile and dispatch phases in Chrome-trace spans
+(``benchmarks/run.py --trace``).
 """
 
 from __future__ import annotations
@@ -26,7 +34,30 @@ def _timed(run, args) -> float:
     return time.perf_counter() - t0
 
 
-def bench(fast: bool = True):
+def _compile_split(run, args, tracer=None, label=""):
+    """(compile_sec, steady_sec): AOT-split timings of a jitted callable.
+
+    Compile time is the real XLA compile (``.lower().compile()``), not a
+    first-call-minus-steady estimate; steady time is min-of-3 on the
+    compiled executable after one warm call (a single sample is dominated
+    by run-to-run noise, which would drown any real regression in the CI
+    trajectory).
+    """
+    import jax
+    from repro.telemetry import maybe_span
+
+    with maybe_span(tracer, f"compile:{label}", cat="compile"):
+        lowered = run.lower(*args)
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+    jax.block_until_ready(compiled(*args))  # warm: allocs, autotuning
+    with maybe_span(tracer, f"steady:{label}", cat="kernel"):
+        dt = min(_timed(compiled, args) for _ in range(3))
+    return t_compile, dt
+
+
+def bench(fast: bool = True, tracer=None):
     import jax
     from repro.core import locality as loc, simulator as sim
     from repro.core.policy import PolicyConfig, available_policies
@@ -50,18 +81,18 @@ def bench(fast: bool = True):
             run = jax.jit(sim._build_run(policy, cfg))
             args = (np.float32(0.8 * cap), est.astype(np.float32),
                     np.uint32(0))
-            jax.block_until_ready(run(*args))  # compile
-            # min-of-3: a single sample is dominated by run-to-run noise,
-            # which would drown any real regression in the CI trajectory
-            dt = min(_timed(run, args) for _ in range(3))
+            t_compile, dt = _compile_split(run, args, tracer,
+                                           f"{name}_{label}")
+            derived = (f"policy={name},topology={label},K={topo.num_tiers},"
+                       f"M={topo.num_servers},horizon={horizon}")
             rows.append((f"sim_slots_per_sec_{name}_{label}",
-                         horizon / dt,
-                         f"policy={name},topology={label},K={topo.num_tiers},"
-                         f"M={topo.num_servers},horizon={horizon}"))
+                         horizon / dt, derived))
+            rows.append((f"sim_compile_sec_{name}_{label}", t_compile,
+                         derived))
     return rows
 
 
-def bench_placement(fast: bool = True):
+def bench_placement(fast: bool = True, tracer=None):
     """Placement-sampler throughput: simulator slots/sec of the default
     policy under every registered replica placement, 3-tier and 4-tier.
 
@@ -91,17 +122,19 @@ def bench_placement(fast: bool = True):
         for plc in available_placements():
             run = jax.jit(sim._build_run("balanced_pandas", cfg,
                                          placement=plc))
-            jax.block_until_ready(run(*args))  # compile
-            dt = min(_timed(run, args) for _ in range(3))
+            t_compile, dt = _compile_split(run, args, tracer,
+                                           f"placement_{plc}_{label}")
+            derived = (f"placement={plc},policy=balanced_pandas,"
+                       f"topology={label},K={topo.num_tiers},"
+                       f"M={topo.num_servers},horizon={horizon}")
             rows.append((f"sim_slots_per_sec_placement_{plc}_{label}",
-                         horizon / dt,
-                         f"placement={plc},policy=balanced_pandas,"
-                         f"topology={label},K={topo.num_tiers},"
-                         f"M={topo.num_servers},horizon={horizon}"))
+                         horizon / dt, derived))
+            rows.append((f"sim_compile_sec_placement_{plc}_{label}",
+                         t_compile, derived))
     return rows
 
 
-def bench_replication(fast: bool = True):
+def bench_replication(fast: bool = True, tracer=None):
     """Replication-lifecycle throughput: simulator slots/sec of the default
     policy under every registered replication controller, with the
     server_loss scenario engaged so the lifecycle machinery (chunk
@@ -128,11 +161,13 @@ def bench_replication(fast: bool = True):
     for ctrl, scen in arms:
         run = jax.jit(sim._build_run("balanced_pandas", cfg, scenario=scen,
                                      replication=ctrl))
-        jax.block_until_ready(run(*args))  # compile
-        dt = min(_timed(run, args) for _ in range(3))
+        t_compile, dt = _compile_split(run, args, tracer,
+                                       f"replication_{ctrl}_{scen}")
+        derived = (f"replication={ctrl},scenario={scen},"
+                   f"policy=balanced_pandas,K={topo.num_tiers},"
+                   f"M={topo.num_servers},horizon={horizon}")
         rows.append((f"sim_slots_per_sec_replication_{ctrl}_{scen}",
-                     horizon / dt,
-                     f"replication={ctrl},scenario={scen},"
-                     f"policy=balanced_pandas,K={topo.num_tiers},"
-                     f"M={topo.num_servers},horizon={horizon}"))
+                     horizon / dt, derived))
+        rows.append((f"sim_compile_sec_replication_{ctrl}_{scen}",
+                     t_compile, derived))
     return rows

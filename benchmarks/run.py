@@ -57,7 +57,13 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="additionally write every bench row as a "
                          "machine-readable JSON perf record (the artifact "
-                         "CI uploads, e.g. BENCH_sim.json)")
+                         "CI uploads, e.g. BENCH_sim.json; schema 2: "
+                         "records + per-section wall times)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(section spans, per-arm compile/steady spans, "
+                         "engine route/admit/decode events) — load it at "
+                         "https://ui.perfetto.dev")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -65,17 +71,29 @@ def main() -> None:
     from benchmarks import bench_kernels, bench_roofline, bench_serving
     from benchmarks import bench_sim, figures
 
+    tracer = None
+    if args.trace:
+        from repro.telemetry import EventRecorder
+        tracer = EventRecorder()
+        tracer.metadata("process_name", name="benchmarks.run")
+
     outdir = Path("experiments/figures")
     outdir.mkdir(parents=True, exist_ok=True)
     csv_rows = []
     fig_rows = []
+    section_times = {}
 
     def section(name, fn):
         if only and name not in only:
             return
         t0 = time.time()
-        rows = fn()
+        if tracer is None:
+            rows = fn()
+        else:
+            with tracer.span(f"section:{name}", cat="section"):
+                rows = fn()
         dt = time.time() - t0
+        section_times[name] = dt
         print(f"# {name} ({dt:.1f}s)", file=sys.stderr)
         if rows and isinstance(rows[0], dict):
             fig_rows.extend(rows)
@@ -97,10 +115,12 @@ def main() -> None:
     section("fig56", lambda: figures.fig56_over(fast))
     section("drift", lambda: figures.fig_drift(fast))
     section("kernels", lambda: bench_kernels.bench(fast))
-    section("sim_throughput", lambda: bench_sim.bench(fast))
-    section("placement", lambda: bench_sim.bench_placement(fast))
-    section("replication", lambda: bench_sim.bench_replication(fast))
-    section("serving", lambda: bench_serving.bench(fast))
+    section("sim_throughput", lambda: bench_sim.bench(fast, tracer=tracer))
+    section("placement",
+            lambda: bench_sim.bench_placement(fast, tracer=tracer))
+    section("replication",
+            lambda: bench_sim.bench_replication(fast, tracer=tracer))
+    section("serving", lambda: bench_serving.bench(fast, tracer=tracer))
     section("serving_scenarios", lambda: bench_serving.bench_scenarios(fast))
     section("trace_replay", lambda: bench_serving.replay_trace(
         fast=fast, export_path="experiments/traces/replayed.jsonl"))
@@ -122,11 +142,14 @@ def main() -> None:
         import json
         import platform
         record = {
-            "schema": 1,
+            # schema 2: adds "sections" (per-section wall seconds) and the
+            # sim_compile_sec_* rows split out of the throughput numbers
+            "schema": 2,
             "suite": "benchmarks.run",
             "full": bool(args.full),
             "python": platform.python_version(),
             "machine": platform.machine(),
+            "sections": {k: round(v, 3) for k, v in section_times.items()},
             "records": [{"name": name, "value": float(val),
                          "derived": str(derived)}
                         for name, val, derived in csv_rows],
@@ -136,6 +159,11 @@ def main() -> None:
             f.write("\n")
         print(f"# wrote {args.json} ({len(csv_rows)} records)",
               file=sys.stderr)
+
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"# wrote {args.trace} ({len(tracer.events())} events, "
+              f"{tracer.dropped} dropped)", file=sys.stderr)
 
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:

@@ -57,6 +57,16 @@ def num_in_system(s: PandasState) -> jnp.ndarray:
     return jnp.sum(s.q) + jnp.sum(s.serving > 0)
 
 
+def telemetry_gauges(s: PandasState):
+    """Per-tier queued counts + busy servers for the telemetry series —
+    shared by every policy on the PANDAS (M, K) queue structure."""
+    k = s.q.shape[1]
+    out = {f"queued_tier{t}": s.q[:, t].sum().astype(jnp.float32)
+           for t in range(k)}
+    out["in_service"] = jnp.sum(s.serving > 0).astype(jnp.float32)
+    return out
+
+
 def workload(s: PandasState, est: jnp.ndarray) -> jnp.ndarray:
     """(M,) estimated weighted workload W_m (waiting + in-service share).
 
@@ -187,3 +197,6 @@ class BalancedPandasPolicy(SlotPolicy):
 
     def num_in_system(self, s: PandasState) -> jnp.ndarray:
         return num_in_system(s)
+
+    def telemetry_gauges(self, s: PandasState):
+        return telemetry_gauges(s)

@@ -117,3 +117,8 @@ class BlindPandasPolicy(SlotPolicy):
         """Mean learned local-tier rate — a cheap observability hook for the
         drift figures (tracks straggler windows opening and closing)."""
         return {"est_alpha_mean": jnp.mean(self.estimates(s)[:, 0])}
+
+    def telemetry_gauges(self, s: BlindPandasState):
+        gauges = bp.telemetry_gauges(s.core)
+        gauges["est_alpha_mean"] = jnp.mean(self.estimates(s)[:, 0])
+        return gauges

@@ -83,3 +83,13 @@ def jsq_route_one(q: jnp.ndarray, key: jax.Array, task: jnp.ndarray,
     qlen = q[task]  # (3,)
     j = loc.random_argmin(key, qlen.astype(jnp.float32))
     return q.at[task[j]].add(active.astype(jnp.int32))
+
+
+def telemetry_gauges(q: jnp.ndarray, serving_tier: jnp.ndarray):
+    """Queued total + busy servers for the telemetry series, shared by the
+    claim-based policies.  Waiting tasks have no tier until claim time
+    (the (m, n) class is resolved when an idle server pulls), so only the
+    totals are honest gauges here — per-tier queue breakdowns come from
+    the PANDAS-structure policies, whose queues ARE tiered."""
+    return {"queued": jnp.sum(q).astype(jnp.float32),
+            "in_service": jnp.sum(serving_tier > 0).astype(jnp.float32)}

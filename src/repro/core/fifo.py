@@ -122,3 +122,10 @@ class FifoPolicy(SlotPolicy):
 
     def extra_metrics(self, s: FifoState):
         return {"drops": s.drops.astype(jnp.float32)}
+
+    def telemetry_gauges(self, s: FifoState):
+        # one global queue: its depth plus busy servers (tiers resolve
+        # only when an idle server pulls the head task)
+        return {"queued": s.count.astype(jnp.float32),
+                "in_service": jnp.sum(s.serving_tier > 0)
+                .astype(jnp.float32)}

@@ -102,3 +102,6 @@ class PandasPoDPolicy(SlotPolicy):
 
     def num_in_system(self, s: bp.PandasState) -> jnp.ndarray:
         return bp.num_in_system(s)
+
+    def telemetry_gauges(self, s: bp.PandasState):
+        return bp.telemetry_gauges(s)

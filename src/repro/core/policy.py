@@ -136,6 +136,14 @@ class SlotPolicy(abc.ABC):
         merged into the simulator's metrics dict."""
         return {}
 
+    def telemetry_gauges(self, state) -> Dict[str, jnp.ndarray]:
+        """Per-slot scalar gauges for the telemetry time series
+        (`repro.telemetry`): queue/occupancy readings off the live state,
+        one value per track name.  Must be pure observation — no RNG, no
+        state mutation — and fixed-keyed (the track list is resolved once
+        at trace time).  Default: no per-policy tracks."""
+        return {}
+
 
 # ---------------------------------------------------------------------------
 # Router: the host-side incremental contract

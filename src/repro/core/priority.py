@@ -89,3 +89,6 @@ class PriorityPolicy(SlotPolicy):
 
     def num_in_system(self, s: PriorityState) -> jnp.ndarray:
         return num_in_system(s)
+
+    def telemetry_gauges(self, s: PriorityState):
+        return claiming.telemetry_gauges(s.q, s.serving_tier)

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core import locality as loc, simulator as sim
 from repro.core.policy import PolicyConfig, PolicyLike
 from repro.placement import PlacementLike, placement_capacity
+from repro.telemetry import TelemetryLike
 from repro.workloads import Scenario, ScenarioConfig, ScenarioLike
 
 EPS_GRID = (0.05, 0.10, 0.15, 0.20, 0.25, 0.30)
@@ -54,6 +55,11 @@ PLACEMENT_SCENARIOS = ("static", "hot_shift", "rack_congestion")
 REPLICATIONS = ("fixed", "popularity", "repair")
 REPLICATION_SCENARIOS = ("server_loss", "rack_loss")
 REPLICATION_POLICIES = ("balanced_pandas", "jsq_maxweight")
+# Tail-latency study grid (EXPERIMENTS.md §Tail latency): heavy-traffic
+# loads where mean ordering and tail ordering can diverge, for the
+# delay-optimal arm, the throughput-optimal arm, and the Hadoop floor.
+TAIL_POLICIES = ("balanced_pandas", "jsq_maxweight", "fifo")
+TAIL_LOADS = (0.90, 0.95, 0.99)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +85,8 @@ def default_study(fast: bool = False) -> StudyConfig:
 def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
               signs: Sequence[int] = (-1, 1),
               scenario: ScenarioLike = None,
-              placement: PlacementLike = None) -> Dict:
+              placement: PlacementLike = None,
+              telemetry: TelemetryLike = None) -> Dict:
     """Returns nested results:
     delay[algo]: (L, E, S) with E = 1 (exact) + len(eps_grid)*len(signs)
     plus the grids needed to plot.  Error settings only materialize for
@@ -87,6 +94,9 @@ def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
     `scenario` (name / Scenario; None -> static) applies to every arm — the
     loads stay expressed as fractions of the STATIC fluid capacity (under
     the uniform placement, whatever `placement` the arms actually run).
+    With `telemetry` enabled (True / TelemetryConfig) the result grows
+    delay_p50/delay_p95/delay_p99[algo] arrays of the same (L, E, S) shape
+    — the FCFS-coupled sojourn percentiles next to the Little's-law means.
     """
     algos = list(algos or (RATE_AWARE + RATE_OBLIVIOUS))
     cap = loc.capacity_hot_rack(cfg.sim.topo, cfg.sim.true_rates, cfg.sim.p_hot)
@@ -105,13 +115,20 @@ def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
     out: Dict = {"capacity": cap, "loads": np.asarray(cfg.loads),
                  "lam": lam, "est_settings": est_settings,
                  "delay": {}, "throughput": {}, "final_n": {}}
+    pct_keys = ("delay_p50", "delay_p95", "delay_p99")
+    if telemetry is not None:
+        for k in pct_keys:
+            out[k] = {}
     for algo in algos:
         stack = est_stack if algo in RATE_AWARE else est_stack[:1]
         res = sim.sweep(algo, cfg.sim, lam, stack, seeds, scenario=scenario,
-                        placement=placement)
+                        placement=placement, telemetry=telemetry)
         out["delay"][algo] = res["mean_delay"]
         out["throughput"][algo] = res["throughput"]
         out["final_n"][algo] = res["final_n"]
+        if telemetry is not None:
+            for k in pct_keys:
+                out[k][algo] = res[k]
     return out
 
 
@@ -343,6 +360,70 @@ def summarize_replication(study: Dict) -> str:
                             f"{float(mv[li].mean()):5.0f}")
                 lines.append(f"{ctrl:{width}s} {float(rho):5.2f}  " +
                              "  ".join(cells))
+    return "\n".join(lines)
+
+
+def tail_study(cfg: StudyConfig,
+               policies: Sequence[str] = TAIL_POLICIES,
+               loads: Sequence[float] = TAIL_LOADS,
+               scenario: ScenarioLike = None,
+               telemetry: TelemetryLike = True) -> Dict:
+    """Heavy-traffic tail-latency study: p50/p95/p99 sojourn next to the
+    Little's-law mean for each scheduler across a rho grid.
+
+    The point of the exercise (EXPERIMENTS.md §Tail latency): mean-delay
+    ordering between schedulers need not match tail ordering — a policy
+    can win on average and still lose the p99.  All arms run at exact
+    rate estimates; percentiles come from the in-scan FCFS-coupled
+    histogram, so values are upper bin edges (error <= one bin width; see
+    `repro.telemetry`).  Returns nested dicts
+    ``out[metric][policy]`` with shape (L, S_seeds) for metric in
+    mean / p50 / p95 / p99, plus accounting (`dropped`, `unmatched`).
+    """
+    cap = loc.capacity_hot_rack(cfg.sim.topo, cfg.sim.true_rates,
+                                cfg.sim.p_hot)
+    lam = np.asarray(loads, np.float32) * cap
+    seeds = np.asarray(cfg.seeds)
+    est_exact = sim.make_estimates(cfg.sim, "network", 0.0, -1)[None]
+
+    keymap = {"mean": "mean_delay", "p50": "delay_p50", "p95": "delay_p95",
+              "p99": "delay_p99", "dropped": "telemetry_dropped",
+              "unmatched": "telemetry_unmatched"}
+    out: Dict = {"capacity": cap, "loads": np.asarray(loads),
+                 "policies": tuple(policies)}
+    for m in keymap:
+        out[m] = {}
+    for pol in policies:
+        res = sim.sweep(pol, cfg.sim, lam, est_exact, seeds,
+                        scenario=scenario, telemetry=telemetry)
+        for m, k in keymap.items():
+            out[m][pol] = res[k][:, 0]  # drop the singleton est axis
+    return out
+
+
+def summarize_tail(study: Dict) -> str:
+    """Human-readable tail-latency table (one row per policy x load),
+    flagging loads where the p99 winner differs from the mean winner."""
+    width = max([16] + [len(p) for p in study["policies"]])
+    lines = [f"loads x static capacity ({study['capacity']:.2f} tasks/slot);"
+             f" delays in slots, mean over seeds; percentiles are upper "
+             f"histogram-bin edges (inf = past hist_max)"]
+    lines.append(f"{'policy':{width}s} {'rho':>5s} {'mean':>9s} "
+                 f"{'p50':>8s} {'p95':>8s} {'p99':>8s}")
+    for li, rho in enumerate(study["loads"]):
+        by = {m: {p: float(np.mean(study[m][p][li]))
+                  for p in study["policies"]}
+              for m in ("mean", "p50", "p95", "p99")}
+        for pol in study["policies"]:
+            lines.append(
+                f"{pol:{width}s} {float(rho):5.2f} {by['mean'][pol]:9.2f} "
+                f"{by['p50'][pol]:8.1f} {by['p95'][pol]:8.1f} "
+                f"{by['p99'][pol]:8.1f}")
+        mean_win = min(by["mean"], key=by["mean"].get)
+        p99_win = min(by["p99"], key=by["p99"].get)
+        if mean_win != p99_win:
+            lines.append(f"{'':{width}s}       ^ tail flip: mean winner "
+                         f"{mean_win}, p99 winner {p99_win}")
     return "\n".join(lines)
 
 

@@ -52,6 +52,8 @@ from repro.core.policy import PolicyLike, make_policy
 from repro import workloads as wl
 from repro.placement import PlacementLike, make_placement
 from repro.replication import ReplicationLike, make_replication
+from repro.telemetry import (SimTelemetry, TelemetryLike,
+                             as_telemetry_config)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,10 +120,24 @@ def make_estimates(cfg: SimConfig, mode: str, eps: float, sign: int,
     return np.clip(est, 1e-3, 1.0)
 
 
+def _merge_metrics(out: Dict[str, Any], extra: Dict[str, Any],
+                   source: str) -> None:
+    """Merge `extra` into the metrics dict, refusing to silently overwrite
+    a key another layer already produced (policy extra_metrics vs
+    replication vs telemetry vs the core Little's-law scalars)."""
+    for k in extra:
+        if k in out:
+            raise ValueError(
+                f"{source} metric key {k!r} collides with an existing "
+                f"metrics key; rename it (existing keys: {sorted(out)})")
+    out.update(extra)
+
+
 def _build_run(policy_like: PolicyLike, cfg: SimConfig,
                scenario: wl.ScenarioLike = None,
                placement: PlacementLike = None,
-               replication: ReplicationLike = None):
+               replication: ReplicationLike = None,
+               telemetry: TelemetryLike = None):
     """Returns jit-able run(lam_total, est(M,3), seed) -> metrics dict.
 
     `scenario` (name / ScenarioConfig / Scenario; None -> "static") compiles
@@ -144,6 +160,14 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
     the scan carry: dead servers serve at rate 0 and lose their
     replicas, migration endpoints serve at the contention multiplier,
     and availability / data-loss metrics join the output dict.
+
+    `telemetry` (None / True / TelemetryConfig; `repro.telemetry`)
+    compiles the in-scan recorders into the step: a FIFO-coupled sojourn
+    histogram (-> ``delay_p50/p95/p99``), a queue-length histogram, and
+    downsampled time series.  ``None`` compiles nothing (the pre-telemetry
+    step, bitwise); when on, the recorder consumes no random bits, so the
+    sample path is still bitwise-identical — only new metrics keys appear
+    (both facts pinned in tests/test_telemetry.py).
     """
     policy = make_policy(policy_like)
     topo, true_rates = cfg.topo, cfg.true_rates
@@ -158,6 +182,21 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
     rep_sim = None
     if not (ctrl.is_static and sched.alive is None):
         rep_sim = ctrl.build_sim(topo, np.asarray(true_rates.values), plc)
+    # Telemetry (repro.telemetry): in-scan recorders for delay/queue-length
+    # distributions and downsampled time series.  `None` compiles nothing
+    # (the pre-telemetry step, bitwise); when configured, the recorder is
+    # pure observation — it consumes no random bits, so the sample path is
+    # STILL bitwise-identical and only new metrics keys appear.
+    tel = None
+    if telemetry is not None and telemetry is not False:
+        tel_tracks = []
+        if rep_sim is not None:
+            tel_tracks += ["alive_servers", "open_lanes"]
+        tel_tracks += sorted(policy.telemetry_gauges(
+            policy.init_state(topo)))
+        tel = SimTelemetry(as_telemetry_config(telemetry), cfg.horizon,
+                           cfg.warmup, topo.num_servers, cfg.max_arrivals,
+                           tuple(tel_tracks))
     # Little's-law denominator: the offered rate over the measurement
     # window is lam_total x the window's mean arrival multiplier (exactly
     # 1.0 for the static scenario and any unit-mean modulation).
@@ -186,6 +225,8 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
                 rep_state, fg_mult = rep_sim.step(
                     carry[4], alive, key_t, active, t >= cfg.warmup)
                 true_mk = true_mk * fg_mult[:, None]
+            if tel is not None:
+                n_prev = policy.num_in_system(state).astype(jnp.int32)
             state, compl = policy.slot_step(state, k_algo, types, active,
                                             est, true_mk, ancestors)
             n = policy.num_in_system(state).astype(jnp.float32)
@@ -196,11 +237,26 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             out_carry = (state, mean_n, n_meas, completions)
             if rep_sim is not None:
                 out_carry += (rep_state,)
+            if tel is not None:
+                # admissions inferred from the state delta, so arrivals the
+                # policy rejected (FIFO's drops) never enter the sojourn
+                # pairing; pure observation of the post-step state
+                n_now = policy.num_in_system(state).astype(jnp.int32)
+                extras = dict(policy.telemetry_gauges(state))
+                if rep_sim is not None:
+                    extras["alive_servers"] = jnp.sum(
+                        alive > 0.5).astype(jnp.float32)
+                    extras["open_lanes"] = jnp.sum(
+                        rep_state.lane_left > 0.0).astype(jnp.float32)
+                out_carry += (tel.record(carry[-1], t, n_now - n_prev + compl,
+                                         compl, n_now, extras),)
             return out_carry, ()
 
         carry0 = (init(), jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0))
         if rep_sim is not None:
             carry0 += (rep_sim.init(),)
+        if tel is not None:
+            carry0 += (tel.init(),)
         carry, _ = jax.lax.scan(step, carry0, jnp.arange(cfg.horizon))
         state, mean_n, n_meas, completions = carry[:4]
         # Little's law needs a positive offered rate; lam_total == 0 used
@@ -213,9 +269,13 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             "throughput": completions / jnp.maximum(n_meas, 1.0),
             "final_n": policy.num_in_system(state).astype(jnp.float32),
         }
-        out.update(policy.extra_metrics(state))
+        _merge_metrics(out, policy.extra_metrics(state),
+                       "SlotPolicy.extra_metrics")
         if rep_sim is not None:
-            out.update(rep_sim.metrics(carry[4]))
+            _merge_metrics(out, rep_sim.metrics(carry[4]),
+                           "replication lifecycle")
+        if tel is not None:
+            _merge_metrics(out, tel.metrics(carry[-1]), "telemetry")
         return out
 
     return run
@@ -225,34 +285,46 @@ def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
              est: np.ndarray, seed: int = 0,
              scenario: wl.ScenarioLike = None,
              placement: PlacementLike = None,
-             replication: ReplicationLike = None) -> Dict[str, Any]:
+             replication: ReplicationLike = None,
+             telemetry: TelemetryLike = None) -> Dict[str, Any]:
     """Single-configuration run (jit-compiled).  ``lam_total == 0`` yields
     ``mean_delay = NaN`` (Little's law is undefined); negative loads are
-    rejected here."""
+    rejected here.  Scalar metrics come back as floats; array-valued
+    telemetry metrics (histograms, the series) as numpy arrays."""
     if lam_total < 0:
         raise ValueError(f"lam_total must be >= 0, got {lam_total}")
-    run = jax.jit(_build_run(policy, cfg, scenario, placement, replication))
+    run = jax.jit(_build_run(policy, cfg, scenario, placement, replication,
+                             telemetry))
     out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
               jnp.asarray(seed, jnp.uint32))
-    return {k: float(v) for k, v in out.items()}
+    res: Dict[str, Any] = {}
+    for k, v in out.items():
+        arr = np.asarray(v)
+        res[k] = float(arr) if arr.ndim == 0 else arr
+    return res
 
 
 def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
           est_stack: np.ndarray, seeds: np.ndarray,
           scenario: wl.ScenarioLike = None,
           placement: PlacementLike = None,
-          replication: ReplicationLike = None) -> Dict[str, np.ndarray]:
+          replication: ReplicationLike = None,
+          telemetry: TelemetryLike = None) -> Dict[str, np.ndarray]:
     """Full cartesian sweep, vmapped: results have shape (L, E, S).
 
     lam_grid: (L,) loads; est_stack: (E, M, K); seeds: (S,).  The scenario
-    schedule, the compiled placement sampler, and the replication
-    machinery are closure constants — their shapes carry no batch
-    dimension, so the whole grid still compiles to one vmapped XLA
-    program (the lifecycle state vmaps through the scan carry).
+    schedule, the compiled placement sampler, the replication machinery,
+    and the telemetry recorder are closure constants — their shapes carry
+    no batch dimension, so the whole grid still compiles to one vmapped
+    XLA program (lifecycle and recorder state vmap through the scan
+    carry).  Telemetry metrics batch like everything else: scalars
+    (delay_p50/p95/p99) come back (L, E, S), histograms (L, E, S, bins+1),
+    the series (L, E, S, T_s, n_tracks).
     """
     if np.any(np.asarray(lam_grid) < 0):
         raise ValueError(f"lam_grid must be >= 0, got {lam_grid}")
-    run = _build_run(policy, cfg, scenario, placement, replication)
+    run = _build_run(policy, cfg, scenario, placement, replication,
+                     telemetry)
     f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),
                  (0, None, None))
     f = jax.jit(f)

@@ -40,6 +40,7 @@ from repro.placement import PlacementLike, make_placement
 from repro.placement.policies import chunk_replicas  # noqa: F401  (canonical
 # home is the placement subsystem; re-exported for the long-standing name)
 from repro.replication import ReplicationLike, make_replication
+from repro.telemetry import CLOCK_UNIT_US, EventRecorder
 from repro.workloads import ScenarioLike, host_playback, make_scenario
 
 
@@ -87,6 +88,11 @@ class PipelineConfig:
     # read path stays bitwise identical.  (`replication` above is the
     # *factor*; this picks the *controller*.)
     replication_policy: ReplicationLike = None
+    # structured event tracing (repro.telemetry.EventRecorder): chunk-read
+    # complete events and failover instants on the pipeline's virtual
+    # clock (1 clock unit == 1 ms in the exported Chrome trace).  None ->
+    # no events, zero overhead.
+    tracer: Optional[EventRecorder] = None
 
 
 def chunk_tokens(cfg: PipelineConfig, chunk_id: int) -> np.ndarray:
@@ -156,6 +162,15 @@ class DataPipeline:
             self.replication_ctl = ctrl.build_host(
                 self.spec, self.placement, cfg.num_chunks, cfg.replication,
                 cfg.seed, self.prior)
+        # Structured event tracing: hosts are trace tids, the virtual
+        # clock maps to trace time at 1 unit == 1 ms.
+        self.tracer = cfg.tracer
+        if self.replication_ctl is not None:
+            self.replication_ctl.tracer = self.tracer
+        if self.tracer is not None:
+            self.tracer.metadata("process_name", name="data_pipeline")
+            for h in range(n_hosts):
+                self.tracer.metadata("thread_name", tid=h, name=f"host{h}")
         self.rng = np.random.default_rng(cfg.seed + 1)
         self._clock = 0.0
         self.metrics = {"local": 0, "rack": 0, "remote": 0,
@@ -202,6 +217,10 @@ class DataPipeline:
                     if self.replication_ctl.is_alive(h)]
             host = live[0]
             self.metrics["failovers"] = self.metrics.get("failovers", 0) + 1
+            if self.tracer is not None:
+                self.tracer.instant("failover", cat="pipeline",
+                                    ts_us=self._clock * CLOCK_UNIT_US,
+                                    tid=host, chunk=chunk_id)
         tier = tier_of(self.spec, locs, host)
         rate = float(self.prior[tier])
         rate *= self.slow.get(host, 1.0)
@@ -211,6 +230,12 @@ class DataPipeline:
             # contention multiplier while a copy is in flight
             rate *= self.replication_ctl.contention_mult(host)
         service = float(self.rng.exponential(1.0 / max(rate, 1e-6)))
+        if self.tracer is not None:
+            # the read occupies [clock, clock + service) on the host's lane
+            self.tracer.complete("chunk_read",
+                                 self._clock * CLOCK_UNIT_US,
+                                 service * CLOCK_UNIT_US, cat="read",
+                                 tid=host, chunk=chunk_id, tier=tier)
         self._clock += service
         self.router.claim(host)  # drain the queued task (read runs now)
         self.router.on_complete(host, tier, service)

@@ -23,6 +23,7 @@ from typing import Any, Dict, List, Mapping
 import numpy as np
 
 from repro.core.cluster import tier_of
+from repro.telemetry import CLOCK_UNIT_US
 
 
 class HostReplication:
@@ -53,6 +54,9 @@ class HostReplication:
         self.lost_reads = 0
         self._alive = np.ones(spec.num_workers, bool)
         self._busy: set = set()
+        # Structured event tracing: consumers (engine / pipeline) install
+        # their EventRecorder here; None -> no events emitted.
+        self.tracer = None
 
     @property
     def num_chunks(self) -> int:
@@ -64,6 +68,14 @@ class HostReplication:
         wipe replicas on dead hosts, kill/commit in-flight moves, drop
         surpluses, start deficit repairs within the lane cap."""
         alive = np.asarray(alive, bool)
+        if self.tracer is not None:
+            ts = float(t) * CLOCK_UNIT_US
+            for h in np.nonzero(self._alive & ~alive)[0]:
+                self.tracer.instant("server_down", cat="failure", ts_us=ts,
+                                    tid=int(h))
+            for h in np.nonzero(~self._alive & alive)[0]:
+                self.tracer.instant("server_up", cat="failure", ts_us=ts,
+                                    tid=int(h))
         self._alive = alive
         self.mask &= alive[self.ids]
         survivors = []
@@ -74,6 +86,11 @@ class HostReplication:
                 self.ids[ln["chunk"], ln["slot"]] = ln["dst"]
                 self.mask[ln["chunk"], ln["slot"]] = True
                 self.moves += 1
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "repair_commit", cat="replication",
+                        ts_us=float(t) * CLOCK_UNIT_US, tid=ln["dst"],
+                        chunk=ln["chunk"], src=ln["src"])
             else:
                 survivors.append(ln)
         self.lanes = survivors
@@ -123,6 +140,12 @@ class HostReplication:
                                    "src": src, "dst": int(dst),
                                    "done_t": float(t)
                                    + float(self.cost[tier])})
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "repair_start", cat="replication",
+                        ts_us=float(t) * CLOCK_UNIT_US, tid=int(dst),
+                        chunk=int(c), src=src,
+                        eta=self.lanes[-1]["done_t"])
                 held[dst] += 1.0
                 started += 1
         self._rebuild_busy()

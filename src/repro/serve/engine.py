@@ -51,6 +51,7 @@ from repro.core.locality import Topology
 from repro.core.policy import make_router
 from repro.placement import PlacementLike, make_placement
 from repro.replication import ReplicationLike, make_replication
+from repro.telemetry import CLOCK_UNIT_US, EventRecorder
 from repro.workloads import (ScenarioLike, Trace, host_playback,
                              make_scenario, trace_from_arrivals)
 
@@ -117,6 +118,12 @@ class EngineConfig:
     # prefix-catalogue size tracked by the replication lifecycle
     # (prefix ids wrap mod this when the lifecycle is active)
     num_prefixes: int = 64
+    # structured event tracing (repro.telemetry.EventRecorder): route /
+    # admit / request / decode events on the engine-step virtual clock
+    # (1 step == 1 ms in the exported Chrome trace; decode X-event
+    # durations are measured wall-clock for kernel-vs-host attribution).
+    # None -> no events recorded, zero overhead on the hot path.
+    tracer: Optional[EventRecorder] = None
 
 
 class Replica:
@@ -170,9 +177,11 @@ class Replica:
         req.generated = [int(jnp.argmax(logits))]
         req.start_time = time.monotonic()
 
-    def decode_once(self) -> None:
+    def decode_once(self) -> List[Request]:
+        """One batched decode step; returns the requests that finished."""
+        finished: List[Request] = []
         if all(r is None for r in self.slot_req):
-            return
+            return finished
         tokens = np.zeros((len(self.slot_req), 1), np.int32)
         for i, r in enumerate(self.slot_req):
             if r is not None and r.generated:
@@ -189,8 +198,10 @@ class Replica:
             if (len(r.generated) > r.max_new_tokens
                     or self.lengths[i] >= self.ecfg.max_len - 1):
                 r.finish_time = time.monotonic()
+                finished.append(r)
                 self.slot_req[i] = None
                 self.lengths[i] = 0
+        return finished
 
 
 class ServingEngine:
@@ -249,11 +260,29 @@ class ServingEngine:
         self.assign_tiers = {t: 0 for t in range(self.spec.num_tiers)}
         # engine-step index of every submit, for trace export (recorded_trace)
         self.arrival_log: List[int] = []
+        # Structured event tracing: router/control events on tid 0, each
+        # replica on tid i+1; virtual clock is the engine-step counter.
+        self.tracer = ecfg.tracer
+        if self.replication is not None:
+            self.replication.tracer = self.tracer
+        if self.tracer is not None:
+            self.tracer.metadata("process_name", name="serving_engine")
+            self.tracer.metadata("thread_name", tid=0, name="router")
+            for i in range(n_rep):
+                self.tracer.metadata("thread_name", tid=i + 1,
+                                     name=f"replica{i}")
+
+    def _ts(self) -> float:
+        """Virtual-clock timestamp (µs) of the current engine step."""
+        return self.steps * CLOCK_UNIT_US
 
     def submit(self, req: Request) -> None:
         req.arrival = time.monotonic()
         self.arrival_log.append(self.steps)
         self.queue.append(req)
+        if self.tracer is not None:
+            self.tracer.instant("submit", cat="engine", ts_us=self._ts(),
+                                rid=req.rid, prefix=req.prefix_id)
 
     def recorded_trace(self, num_intervals: int = 32,
                        name: str = "engine") -> Trace:
@@ -279,6 +308,10 @@ class ServingEngine:
                 self.replication.note_read(req.prefix_id)
                 if not locs:
                     self.lost_routes += 1
+                    if self.tracer is not None:
+                        self.tracer.instant("lost_route", cat="engine",
+                                            ts_us=self._ts(), rid=req.rid,
+                                            prefix=req.prefix_id)
                     locs = self.placement.replicas(self.spec, req.prefix_id,
                                                    3, self.ecfg.seed)
             else:
@@ -291,6 +324,10 @@ class ServingEngine:
                 self.rebalanced += self.placement.rebalance()
             req._locs = locs  # type: ignore[attr-defined]
             decision = self.router.route(locs)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "route", cat="engine", ts_us=self._ts(), rid=req.rid,
+                    replica=-1 if decision.deferred else decision.worker)
             if decision.deferred:
                 self.pending.append(req)  # assigned at claim time
             else:
@@ -311,6 +348,11 @@ class ServingEngine:
                 req.replica = i
                 req.tier = tier_of(self.spec, req._locs, req.replica)
                 self.assign_tiers[req.tier] += 1
+                req._admit_step = self.steps  # type: ignore[attr-defined]
+                if self.tracer is not None:
+                    self.tracer.instant("admit", cat="engine",
+                                        ts_us=self._ts(), tid=i + 1,
+                                        rid=req.rid, tier=req.tier)
                 t0 = time.monotonic()
                 self.replicas[req.replica].admit(req)
                 slow = self.slow.get(req.replica, 1.0) * self.playback.slowdown(
@@ -334,8 +376,31 @@ class ServingEngine:
                                      self.playback.alive_mask_at(self.steps))
         self._route_arrivals()
         self._admit()
-        for rep in self.replicas:
-            rep.decode_once()
+        if self.tracer is None:
+            for rep in self.replicas:
+                rep.decode_once()
+        else:
+            self.tracer.counter(
+                "queued", len(self.queue) + len(self.pending)
+                + sum(len(w) for w in self.waiting), ts_us=self._ts())
+            for i, rep in enumerate(self.replicas):
+                active = sum(r is not None for r in rep.slot_req)
+                t0 = self.tracer.now_us()
+                finished = rep.decode_once()
+                if active:
+                    # virtual-clock placement, wall-clock width: the dur
+                    # is real kernel-dispatch time attributed to this step
+                    self.tracer.complete("decode", self._ts(),
+                                         self.tracer.now_us() - t0,
+                                         cat="kernel", tid=i + 1,
+                                         batch=active)
+                for r in finished:
+                    a = getattr(r, "_admit_step", self.steps)
+                    self.tracer.complete(
+                        f"request{r.rid}", a * CLOCK_UNIT_US,
+                        (self.steps - a + 1) * CLOCK_UNIT_US, cat="request",
+                        tid=r.replica + 1, rid=r.rid, tier=r.tier,
+                        tokens=len(r.generated or ()))
         self.steps += 1
 
     def run_until_drained(self, all_requests: Sequence[Request],

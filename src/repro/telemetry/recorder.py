@@ -1,0 +1,286 @@
+"""In-scan telemetry recorders: fixed-shape tracks inside the `lax.scan`.
+
+The simulator's metrics are end-of-run scalar means, but the paper's
+heavy-traffic claims are statements about *distributions* — of task delay
+and of queue length.  This module records both inside the scan without
+breaking any of its invariants:
+
+  * every buffer is fixed-shape (scan carry), so `sweep()` still vmaps
+    the whole (load x error x seed) grid over it;
+  * recording consumes NO random bits — the arrival/routing/service
+    streams keep their exact keys, so enabling telemetry cannot perturb
+    a sample path (pure observation; pinned in tests/test_telemetry.py);
+  * with ``telemetry=None`` the simulator compiles none of this
+    (PR 6's fixed+static passthrough discipline).
+
+Sojourn times without per-task identity: every policy stores anonymous
+queue *counts*, so the recorder pairs the i-th admitted task with the
+i-th completion — a FIFO coupling over a ring buffer of arrival slots.
+The histogram MEAN is pairing-invariant (the multiset sum of sojourns
+equals the sum over slots of tasks-in-system, whatever the pairing), so
+it matches the simulator's Little's-law `mean_delay`; quantiles are
+reported under the FIFO coupling, which is exact for FIFO and the
+standard virtual-delay proxy for the others.  Admissions are inferred
+from the policy state itself (``n_after - n_before + completions``), so
+FIFO's dropped arrivals never enter the ring.
+
+Percentile estimates come from a fixed-bin histogram: the reported
+quantile is the UPPER EDGE of the bin containing it, so the estimate
+exceeds the exact order statistic by at most one bin width
+(``hist_max / hist_bins`` slots) — the error bound docs/observability.md
+documents and the tests assert.  Sojourns beyond ``hist_max`` land in an
+overflow bin; a quantile falling there reports ``inf`` (raise
+``hist_max``) rather than a silently-clamped number.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Recorder shapes (all static: they fix the scan-carry buffers).
+
+    stride        -- time-series downsample stride in slots (1 = dense)
+    hist_bins     -- sojourn-histogram regular bins (+1 overflow bin)
+    hist_max      -- sojourn (slots) where the overflow bin starts
+    qhist_bins    -- queue-length-histogram regular bins (+1 overflow)
+    qhist_max     -- queue length where the overflow bin starts
+    ring_capacity -- FIFO arrival-slot ring size; admissions beyond a
+                     full ring are dropped from pairing (and counted in
+                     ``telemetry_dropped`` — no silent truncation)
+
+    The defaults give a sojourn bin width of exactly 1 slot; sojourns are
+    integer slot counts, so up to ``hist_max`` the percentile estimate is
+    the exact order statistic plus one bin width.  Raise ``hist_max``
+    (or widen bins) for heavy-traffic runs whose tails pass 256 slots.
+    """
+
+    stride: int = 16
+    hist_bins: int = 256
+    hist_max: float = 256.0
+    qhist_bins: int = 128
+    qhist_max: float = 512.0
+    ring_capacity: int = 4096
+
+    def __post_init__(self):
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1, got {self.stride}")
+        if self.hist_bins < 1 or self.qhist_bins < 1:
+            raise ValueError("hist_bins/qhist_bins must be >= 1")
+        if self.hist_max <= 0 or self.qhist_max <= 0:
+            raise ValueError("hist_max/qhist_max must be > 0")
+        if self.ring_capacity < 1:
+            raise ValueError(
+                f"ring_capacity must be >= 1, got {self.ring_capacity}")
+
+    @property
+    def bin_width(self) -> float:
+        """Sojourn-histogram bin width (slots) == the percentile error
+        bound."""
+        return float(self.hist_max) / self.hist_bins
+
+    @property
+    def qbin_width(self) -> float:
+        return float(self.qhist_max) / self.qhist_bins
+
+
+TelemetryLike = Union[None, bool, TelemetryConfig]
+
+#: metric keys `SimTelemetry.metrics` adds to the simulator output dict
+TELEMETRY_METRIC_KEYS = (
+    "delay_p50", "delay_p95", "delay_p99", "delay_hist", "queue_len_hist",
+    "series", "telemetry_dropped", "telemetry_unmatched",
+)
+
+
+def as_telemetry_config(spec: TelemetryLike) -> TelemetryConfig:
+    """None/False -> disabled is handled by the caller; True -> defaults."""
+    if spec is True:
+        return TelemetryConfig()
+    if isinstance(spec, TelemetryConfig):
+        return spec
+    raise TypeError(f"telemetry must be None, True, or a TelemetryConfig; "
+                    f"got {spec!r}")
+
+
+class TelState(NamedTuple):
+    """Recorder state threaded through the scan carry (fixed shapes)."""
+
+    ring: jnp.ndarray       # (B,) int32 arrival slots, FIFO order
+    head: jnp.ndarray       # () int32 index of oldest entry
+    count: jnp.ndarray      # () int32 entries in the ring
+    delay_hist: jnp.ndarray  # (H+1,) int32 sojourn counts (+overflow)
+    qlen_hist: jnp.ndarray   # (Q+1,) int32 queue-length counts (+overflow)
+    series: jnp.ndarray      # (T_s, n_tracks) f32 downsampled point samples
+    dropped: jnp.ndarray     # () int32 admissions not ringed (ring full)
+    unmatched: jnp.ndarray   # () int32 in-window completions not binned
+
+
+class SimTelemetry:
+    """Compiled recorder for one (config, horizon, policy-track) tuple."""
+
+    BASE_TRACKS: Tuple[str, ...] = ("n_in_system", "admitted", "completions")
+
+    def __init__(self, cfg: TelemetryConfig, horizon: int, warmup: int,
+                 num_servers: int, max_arrivals: int,
+                 extra_tracks: Sequence[str] = ()):
+        need = max(int(max_arrivals), int(num_servers))
+        if cfg.ring_capacity < need:
+            raise ValueError(
+                f"ring_capacity ({cfg.ring_capacity}) must be >= "
+                f"max(max_arrivals, num_servers) = {need} so one slot's "
+                f"pushes/pops hit distinct ring indices")
+        extra = tuple(extra_tracks)
+        clash = set(extra) & set(self.BASE_TRACKS)
+        if clash:
+            raise ValueError(f"telemetry track names collide with the "
+                             f"base tracks: {sorted(clash)}")
+        if len(set(extra)) != len(extra):
+            raise ValueError(f"duplicate telemetry track names: {extra}")
+        self.cfg = cfg
+        self.horizon = int(horizon)
+        self.warmup = int(warmup)
+        self.max_arrivals = int(max_arrivals)
+        self.num_servers = int(num_servers)
+        self.extra_tracks = extra
+        self.track_names: Tuple[str, ...] = self.BASE_TRACKS + extra
+        self.n_samples = -(-self.horizon // cfg.stride)  # ceil division
+
+    # -- scan-side ----------------------------------------------------------
+    def init(self) -> TelState:
+        i32, f32 = jnp.int32, jnp.float32
+        c = self.cfg
+        return TelState(
+            ring=jnp.zeros(c.ring_capacity, i32),
+            head=jnp.zeros((), i32),
+            count=jnp.zeros((), i32),
+            delay_hist=jnp.zeros(c.hist_bins + 1, i32),
+            qlen_hist=jnp.zeros(c.qhist_bins + 1, i32),
+            series=jnp.zeros((self.n_samples, len(self.track_names)), f32),
+            dropped=jnp.zeros((), i32),
+            unmatched=jnp.zeros((), i32),
+        )
+
+    def record(self, st: TelState, t, admitted, completions, n_now,
+               extras: Dict[str, jnp.ndarray]) -> TelState:
+        """One slot of observation.  `admitted`/`completions`/`n_now` are
+        int32 scalars for slot `t` (admissions pushed before completions
+        are popped, matching the simulator's arrivals-then-service phase
+        order: a task admitted and completed in the same slot has
+        sojourn 0).  `extras` must carry exactly the extra tracks this
+        recorder was built with."""
+        if set(extras) != set(self.extra_tracks):
+            raise ValueError(
+                f"telemetry extras {sorted(extras)} do not match the "
+                f"recorder's tracks {sorted(self.extra_tracks)}")
+        i32, f32 = jnp.int32, jnp.float32
+        c = self.cfg
+        B = c.ring_capacity
+        t = t.astype(i32)
+        in_w = (t >= self.warmup).astype(i32)
+        a = jnp.clip(admitted.astype(i32), 0, self.max_arrivals)
+        compl = jnp.clip(completions.astype(i32), 0, self.num_servers)
+
+        # push admissions (FIFO tail), dropping what the ring cannot hold
+        pushes = jnp.minimum(a, B - st.count)
+        lane = jnp.arange(self.max_arrivals, dtype=i32)
+        idx = (st.head + st.count + lane) % B
+        put = lane < pushes
+        ring = st.ring.at[idx].set(jnp.where(put, t, st.ring[idx]))
+        count = st.count + pushes
+        dropped = st.dropped + (a - pushes)
+
+        # pop completions (FIFO head) and bin their sojourns
+        pops = jnp.minimum(compl, count)
+        lane_m = jnp.arange(self.num_servers, dtype=i32)
+        idx_m = (st.head + lane_m) % B
+        take = lane_m < pops
+        soj = (t - ring[idx_m]).astype(f32)
+        bins = jnp.clip((soj / c.bin_width).astype(i32), 0, c.hist_bins)
+        weight = (take & (in_w > 0)).astype(i32)
+        delay_hist = st.delay_hist.at[bins].add(weight)
+        unmatched = st.unmatched + in_w * (compl - pops)
+        head = (st.head + pops) % B
+        count = count - pops
+
+        # queue-length distribution over the measurement window
+        qbin = jnp.clip((n_now.astype(f32) / c.qbin_width).astype(i32),
+                        0, c.qhist_bins)
+        qlen_hist = st.qlen_hist.at[qbin].add(in_w)
+
+        # downsampled point samples: slot t lands at row t // stride
+        vals = [n_now.astype(f32), a.astype(f32), compl.astype(f32)]
+        vals += [jnp.asarray(extras[k], f32) for k in self.extra_tracks]
+        row_idx = t // c.stride
+        sample = (t % c.stride == 0)
+        row = jnp.where(sample, jnp.stack(vals), st.series[row_idx])
+        series = st.series.at[row_idx].set(row)
+
+        return TelState(ring=ring, head=head, count=count,
+                        delay_hist=delay_hist, qlen_hist=qlen_hist,
+                        series=series, dropped=dropped, unmatched=unmatched)
+
+    def metrics(self, st: TelState) -> Dict[str, jnp.ndarray]:
+        """End-of-run telemetry metrics (in-graph, so `sweep` vmaps them)."""
+        f32 = jnp.float32
+        hist = st.delay_hist.astype(f32)
+        w = jnp.float32(self.cfg.bin_width)
+        return {
+            "delay_p50": _hist_quantile(hist, w, 0.50),
+            "delay_p95": _hist_quantile(hist, w, 0.95),
+            "delay_p99": _hist_quantile(hist, w, 0.99),
+            "delay_hist": hist,
+            "queue_len_hist": st.qlen_hist.astype(f32),
+            "series": st.series,
+            "telemetry_dropped": st.dropped.astype(f32),
+            "telemetry_unmatched": st.unmatched.astype(f32),
+        }
+
+
+def _hist_quantile(hist: jnp.ndarray, width, q: float) -> jnp.ndarray:
+    """Upper edge of the bin holding quantile `q` (NaN on an empty
+    histogram, inf when it falls in the overflow bin)."""
+    c = jnp.cumsum(hist)
+    total = c[-1]
+    idx = jnp.argmax(c >= q * total)
+    val = (idx.astype(jnp.float32) + 1.0) * width
+    val = jnp.where(idx >= hist.shape[0] - 1, jnp.inf, val)
+    return jnp.where(total > 0, val, jnp.nan)
+
+
+# -- host-side reference helpers (numpy; used by tests, docs, studies) ------
+
+def percentiles_from_hist(counts: np.ndarray, bin_width: float,
+                          qs: Sequence[float]) -> np.ndarray:
+    """Numpy mirror of the in-graph quantile: upper bin edge per q."""
+    counts = np.asarray(counts, np.float64)
+    c = np.cumsum(counts)
+    total = c[-1]
+    out = np.empty(len(qs))
+    for i, q in enumerate(qs):
+        if total <= 0:
+            out[i] = np.nan
+            continue
+        idx = int(np.argmax(c >= q * total))
+        out[i] = np.inf if idx >= len(counts) - 1 else (idx + 1) * bin_width
+    return out
+
+
+def fcfs_sojourns(admitted: np.ndarray,
+                  completions: np.ndarray) -> np.ndarray:
+    """Exact sojourns under the same FIFO coupling the in-scan recorder
+    uses, reconstructed from DENSE (stride=1) per-slot admission and
+    completion counts: the i-th admission pairs with the i-th completion.
+    Unpaired admissions (still in system at the end) are censored."""
+    a = np.asarray(admitted).astype(np.int64)
+    c = np.asarray(completions).astype(np.int64)
+    arr = np.repeat(np.arange(len(a)), a)
+    dep = np.repeat(np.arange(len(c)), c)
+    n = min(len(arr), len(dep))
+    return (dep[:n] - arr[:n]).astype(np.int64)

@@ -1,0 +1,236 @@
+"""Telemetry subsystem: in-scan recorder (bitwise purity, percentile
+accuracy, downsampling, accounting) and host-side event tracing (Chrome
+trace schema, engine/pipeline emission)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import locality as loc, simulator as sim
+from repro.core.balanced_pandas import BalancedPandasPolicy
+from repro.core.policy import available_policies
+from repro.telemetry import (TELEMETRY_METRIC_KEYS, EventRecorder,
+                             SimTelemetry, TelemetryConfig,
+                             as_telemetry_config, fcfs_sojourns, load_trace,
+                             maybe_span, percentiles_from_hist,
+                             validate_chrome_trace)
+
+TOPO = loc.Topology(12, 4)
+CFG = sim.SimConfig(topo=TOPO, true_rates=loc.Rates(), max_arrivals=16,
+                    horizon=500, warmup=100)
+EST = sim.make_estimates(CFG, "network", 0.0, -1)
+
+
+# -- in-scan recorder --------------------------------------------------------
+
+@pytest.mark.parametrize("policy", available_policies())
+def test_telemetry_is_pure_observation(policy):
+    """Enabling telemetry must not perturb the sample path: the recorder
+    consumes no RNG keys and mutates no policy state, so every metric of
+    the plain run is bitwise identical with the recorder compiled in —
+    and with it compiled out nothing telemetry-shaped appears at all."""
+    off = sim.simulate(policy, CFG, 3.0, EST, seed=0)
+    on = sim.simulate(policy, CFG, 3.0, EST, seed=0, telemetry=True)
+    for k, v in off.items():
+        assert np.array_equal(np.asarray(v), np.asarray(on[k])), (policy, k)
+    for k in TELEMETRY_METRIC_KEYS:
+        assert k in on and k not in off, (policy, k)
+
+
+def test_percentiles_match_exact_fcfs_quantiles():
+    """Width-1 bins + integer sojourns: the histogram quantile must sit
+    within one bin width above the exact order statistic of the same
+    FIFO-coupled sojourn multiset (reconstructed from the dense series)."""
+    cfg = sim.SimConfig(topo=TOPO, true_rates=loc.Rates(), max_arrivals=16,
+                        horizon=600, warmup=0)
+    tcfg = TelemetryConfig(stride=1)
+    res = sim.simulate("balanced_pandas", cfg, 3.2, EST, seed=1,
+                       telemetry=tcfg)
+    admitted = res["series"][:, 1]
+    completions = res["series"][:, 2]
+    soj = fcfs_sojourns(admitted, completions)
+    assert len(soj) == int(res["delay_hist"].sum())
+    s = np.sort(soj)
+    for q, key in ((0.50, "delay_p50"), (0.95, "delay_p95"),
+                   (0.99, "delay_p99")):
+        # exact order statistic: smallest x with F(x) >= q
+        exact = s[int(np.ceil(q * len(s))) - 1]
+        est = res[key]
+        assert 0.0 < est - exact <= tcfg.bin_width + 1e-6, (key, est, exact)
+    # the numpy mirror agrees with the in-graph quantile
+    ps = percentiles_from_hist(res["delay_hist"], tcfg.bin_width,
+                               (0.5, 0.95, 0.99))
+    np.testing.assert_allclose(
+        ps, [res["delay_p50"], res["delay_p95"], res["delay_p99"]])
+
+
+def test_downsampled_series_matches_dense():
+    """stride=s point-samples the dense track: row i == dense row s*i."""
+    dense = sim.simulate("balanced_pandas", CFG, 3.0, EST, seed=0,
+                         telemetry=TelemetryConfig(stride=1))
+    coarse = sim.simulate("balanced_pandas", CFG, 3.0, EST, seed=0,
+                          telemetry=TelemetryConfig(stride=4))
+    n = coarse["series"].shape[0]
+    np.testing.assert_array_equal(coarse["series"],
+                                  dense["series"][: 4 * n: 4])
+
+
+def test_accounting_invariants_no_drops():
+    """With an ample ring the pairing is lossless: every in-window
+    completion is binned, nothing is dropped or unmatched, and the
+    queue-length histogram covers exactly the measurement window."""
+    res = sim.simulate("balanced_pandas", CFG, 3.0, EST, seed=0,
+                       telemetry=TelemetryConfig(stride=1))
+    window_completions = res["series"][CFG.warmup:, 2].sum()
+    assert res["telemetry_dropped"] == 0.0
+    assert res["telemetry_unmatched"] == 0.0
+    assert res["delay_hist"].sum() == window_completions
+    assert res["queue_len_hist"].sum() == CFG.horizon - CFG.warmup
+
+
+def test_tiny_ring_drops_are_counted():
+    """A deliberately tiny ring loses pairings but never miscounts:
+    drops are reported and binned + unmatched still equals the window
+    completion count (no silent truncation)."""
+    tcfg = TelemetryConfig(stride=1, ring_capacity=16)
+    res = sim.simulate("balanced_pandas", CFG, 5.0, EST, seed=0,
+                       telemetry=tcfg)
+    assert res["telemetry_dropped"] > 0.0
+    window_completions = res["series"][CFG.warmup:, 2].sum()
+    assert res["delay_hist"].sum() + res["telemetry_unmatched"] \
+        == window_completions
+
+
+def test_sweep_telemetry_shapes():
+    """Telemetry metrics batch through the vmapped sweep like the core
+    scalars: (L, E, S) scalars, (L, E, S, bins+1) histograms,
+    (L, E, S, T_s, n_tracks) series."""
+    tcfg = TelemetryConfig(stride=16, hist_bins=64, hist_max=64.0,
+                           qhist_bins=32)
+    res = sim.sweep("balanced_pandas", CFG, np.asarray([2.0, 3.0]),
+                    EST[None], np.asarray([0, 1, 2]), telemetry=tcfg)
+    assert res["delay_p99"].shape == (2, 1, 3)
+    assert res["delay_hist"].shape == (2, 1, 3, 65)
+    assert res["queue_len_hist"].shape == (2, 1, 3, 33)
+    n_rows = -(-CFG.horizon // 16)
+    assert res["series"].shape[:4] == (2, 1, 3, n_rows)
+
+
+def test_metric_key_collision_raises():
+    """A policy whose extra_metrics shadows a core metric key must fail
+    loudly at trace time, not silently overwrite."""
+
+    class ShadowingPolicy(BalancedPandasPolicy):
+        def extra_metrics(self, s):
+            return {"mean_delay": 0.0}
+
+    with pytest.raises(ValueError, match="mean_delay"):
+        sim.simulate(ShadowingPolicy(), CFG, 3.0, EST, seed=0)
+
+
+def test_recorder_construction_guards():
+    with pytest.raises(ValueError, match="ring_capacity"):
+        SimTelemetry(TelemetryConfig(ring_capacity=4), 100, 0, 12, 16)
+    with pytest.raises(ValueError, match="collide"):
+        SimTelemetry(TelemetryConfig(), 100, 0, 4, 4,
+                     extra_tracks=("admitted",))
+    with pytest.raises(ValueError, match="duplicate"):
+        SimTelemetry(TelemetryConfig(), 100, 0, 4, 4,
+                     extra_tracks=("x", "x"))
+    with pytest.raises(ValueError):
+        TelemetryConfig(stride=0)
+    with pytest.raises(TypeError):
+        as_telemetry_config("yes")
+
+
+# -- host-side event tracing -------------------------------------------------
+
+def test_chrome_trace_roundtrip(tmp_path):
+    tr = EventRecorder(capacity=64, pid=7)
+    tr.metadata("process_name", name="test")
+    tr.instant("hello", cat="t", ts_us=1000.0, tid=2, detail="x")
+    tr.counter("depth", 3.0, ts_us=2000.0)
+    tr.complete("work", ts_us=1000.0, dur_us=500.0, tid=1)
+    with tr.span("wall", cat="host"):
+        pass
+    with maybe_span(None, "noop"):
+        pass  # tracing off: must be a no-op context
+    path = tr.save(tmp_path / "trace.json")
+    doc = load_trace(path)
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["dropped"] == 0
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert names == ["process_name", "hello", "depth", "work", "wall"]
+    by_name = {e["name"]: e for e in doc["traceEvents"]}
+    assert by_name["hello"]["ph"] == "i"
+    assert by_name["hello"]["args"] == {"detail": "x"}
+    assert by_name["depth"]["args"] == {"value": 3.0}
+    assert by_name["work"]["ph"] == "X" and by_name["work"]["dur"] == 500.0
+    assert all(e["pid"] == 7 for e in doc["traceEvents"])
+
+
+def test_ring_eviction_is_counted():
+    tr = EventRecorder(capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}")
+    assert tr.dropped == 6
+    assert [e["name"] for e in tr.events()] == ["e6", "e7", "e8", "e9"]
+    assert tr.to_chrome()["otherData"]["emitted"] == 10
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_chrome_trace([])  # not an object
+    with pytest.raises(ValueError, match="ts"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "a", "ph": "i", "pid": 0, "tid": 0}]})
+    with pytest.raises(ValueError, match="phase"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "a", "ph": "Z", "ts": 0.0, "pid": 0, "tid": 0}]})
+    with pytest.raises(ValueError, match="dur"):
+        validate_chrome_trace({"traceEvents": [
+            {"name": "a", "ph": "X", "ts": 0.0, "pid": 0, "tid": 0}]})
+    validate_chrome_trace({"traceEvents": []})  # minimal valid doc
+
+
+def test_pipeline_emits_trace_events(tmp_path):
+    """Chunk reads, failure windows, and repair lifecycle all land in the
+    trace on the virtual clock, and the export is Perfetto-valid."""
+    from repro.data.pipeline import DataPipeline, PipelineConfig
+
+    tr = EventRecorder()
+    cfg = PipelineConfig(num_hosts=8, hosts_per_pod=4, num_chunks=32,
+                         tokens_per_chunk=512, seq_len=64, global_batch=4,
+                         scenario="server_loss", scenario_horizon=32.0,
+                         replication_policy="repair", tracer=tr)
+    pipe = DataPipeline(cfg)
+    for _ in range(80):
+        next(pipe)
+    doc = json.loads(json.dumps(tr.to_chrome()))  # JSON-serializable
+    validate_chrome_trace(doc)
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"chunk_read", "server_down", "server_up",
+            "repair_start", "repair_commit"} <= names
+    reads = [e for e in doc["traceEvents"] if e["name"] == "chunk_read"]
+    assert all(e["ph"] == "X" and e["dur"] > 0 for e in reads)
+    # virtual clock convention: ts(µs) = 1000 x virtual clock
+    assert max(e["ts"] for e in reads) <= pipe._clock * 1000.0
+
+
+def test_untraced_pipeline_is_unchanged():
+    """Tracing must leave the read path byte-identical (pure
+    observation): same batches, same metrics, same virtual clock."""
+    import dataclasses
+
+    from repro.data.pipeline import DataPipeline, PipelineConfig
+
+    base = PipelineConfig(num_hosts=8, hosts_per_pod=4, num_chunks=16,
+                          tokens_per_chunk=512, seq_len=64, global_batch=2)
+    a = DataPipeline(base)
+    b = DataPipeline(dataclasses.replace(base, tracer=EventRecorder()))
+    for _ in range(4):
+        xa, xb = next(a), next(b)
+        np.testing.assert_array_equal(xa["tokens"], xb["tokens"])
+    assert a.metrics["reads"] == b.metrics["reads"]
+    assert a._clock == b._clock
