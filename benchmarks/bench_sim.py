@@ -92,6 +92,77 @@ def bench(fast: bool = True, tracer=None):
     return rows
 
 
+def bench_scaling(fast: bool = True, tracer=None):
+    """Fleet-scale throughput: simulated slots/sec of the fleet fast path
+    (sharding.sim) at M=2400 and M=10008 servers, plus the dense
+    reference arm at M=2400.
+
+    These are the headline rows of the fast-fleet-path work: the dense
+    `lax.scan` body is dispatch-bound (a sequential `fori_loop` of
+    O(M) argmins per arrival), while the fleet path routes the whole
+    arrival batch against a workload snapshot in O(M*depth + B) — see
+    docs/scaling.md for the performance model.  The dense M=2400 row is
+    the "before" curve; `sim_slots_per_sec_scaling_kernel_M10008` is the
+    acceptance metric for 10k-server studies.
+    """
+    import jax
+    from repro.core import locality as loc, simulator as sim
+    from repro.sharding.sim import FleetConfig, _build_fleet_chunk
+
+    rows = []
+    horizon = 512 if fast else 2_048
+    fleet_ms = (2_400, 10_008) if fast else (2_400, 10_008, 24_000)
+    rates = loc.Rates()
+
+    def fleet_arm(m):
+        topo = loc.Topology(m, 6)
+        cap = loc.capacity_hot_rack(topo, rates, 0.5)
+        lam = 0.8 * cap
+        batch = int(2.05 * lam)
+        fc = FleetConfig()
+        cfg = sim.SimConfig(topo=topo, true_rates=rates, p_hot=0.5,
+                            max_arrivals=batch, horizon=horizon,
+                            warmup=horizon // 4)
+        est = loc.per_server_rates(rates.as_array(), m).astype(np.float32)
+        init, chunk = _build_fleet_chunk("balanced_pandas", cfg, fc)
+        run = jax.jit(chunk)  # no donation: _compile_split reuses args
+        args = (init(), np.int32(0), np.float32(lam), est, np.uint32(0))
+        t_compile, dt = _compile_split(run, args, tracer,
+                                       f"scaling_kernel_M{m}")
+        derived = (f"path=fleet,policy=balanced_pandas,M={m},"
+                   f"chunk={fc.chunk},rounds={fc.rounds},"
+                   f"batch={batch},horizon={horizon}")
+        rows.append((f"sim_slots_per_sec_scaling_kernel_M{m}",
+                     fc.chunk / dt, derived))
+        rows.append((f"sim_compile_sec_scaling_kernel_M{m}", t_compile,
+                     derived))
+
+    def dense_arm(m, dense_horizon):
+        topo = loc.Topology(m, 6)
+        cap = loc.capacity_hot_rack(topo, rates, 0.5)
+        lam = 0.8 * cap
+        cfg = sim.SimConfig(topo=topo, true_rates=rates, p_hot=0.5,
+                            max_arrivals=int(2.05 * lam),
+                            horizon=dense_horizon,
+                            warmup=dense_horizon // 4)
+        est = loc.per_server_rates(rates.as_array(), m).astype(np.float32)
+        run = jax.jit(sim._build_run("balanced_pandas", cfg))
+        args = (np.float32(lam), est, np.uint32(0))
+        t_compile, dt = _compile_split(run, args, tracer,
+                                       f"scaling_dense_M{m}")
+        derived = (f"path=dense,policy=balanced_pandas,M={m},"
+                   f"horizon={dense_horizon}")
+        rows.append((f"sim_slots_per_sec_scaling_dense_M{m}",
+                     dense_horizon / dt, derived))
+        rows.append((f"sim_compile_sec_scaling_dense_M{m}", t_compile,
+                     derived))
+
+    for m in fleet_ms:
+        fleet_arm(m)
+    dense_arm(2_400, 64 if fast else 256)
+    return rows
+
+
 def bench_placement(fast: bool = True, tracer=None):
     """Placement-sampler throughput: simulator slots/sec of the default
     policy under every registered replica placement, 3-tier and 4-tier.

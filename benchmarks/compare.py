@@ -1,0 +1,119 @@
+"""Compare two bench artifacts (schema-2 ``BENCH_*.json``) and flag
+throughput regressions.
+
+    PYTHONPATH=src python -m benchmarks.compare BASELINE.json CURRENT.json \
+        [--threshold 0.20] [--fail-on-regression]
+
+Rows are matched by record name.  Only throughput-style rows (names
+containing ``slots_per_sec``, ``tokens_per_sec``, ``us_per_call`` or
+``_per_sec``) participate in regression gating; for ``us_per_call`` /
+``_sec_`` rows *higher is worse*, for ``per_sec`` rows *lower is worse*.
+A row regresses when it is more than ``--threshold`` (default 20%) worse
+than the baseline.  Everything is printed either way — the CI job runs
+warn-only (no ``--fail-on-regression``), so a noisy container can't block
+a merge, but the deltas land in the job log and the artifact trail.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+# name-substring -> direction ("up" = bigger is better)
+_GATED = (
+    ("slots_per_sec", "up"),
+    ("tokens_per_sec", "up"),
+    ("_per_sec", "up"),
+    ("us_per_call", "down"),
+    ("compile_sec", "down"),
+)
+
+
+def _direction(name: str) -> str | None:
+    for sub, direction in _GATED:
+        if sub in name:
+            return direction
+    return None
+
+
+def load_records(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != 2:
+        raise SystemExit(f"{path}: expected schema 2 artifact, got "
+                         f"{doc.get('schema')!r}")
+    return {r["name"]: float(r["value"]) for r in doc["records"]}
+
+
+def compare(base: Dict[str, float], cur: Dict[str, float],
+            threshold: float) -> Tuple[list, list, list]:
+    """(regressions, improvements, other) rows: (name, base, cur, ratio).
+
+    ratio > 1 means better than baseline, < 1 worse, regardless of the
+    row's direction.
+    """
+    regressions, improvements, other = [], [], []
+    for name in sorted(set(base) & set(cur)):
+        b, c = base[name], cur[name]
+        direction = _direction(name)
+        if direction is None or b <= 0 or c <= 0:
+            other.append((name, b, c, float("nan")))
+            continue
+        ratio = c / b if direction == "up" else b / c
+        row = (name, b, c, ratio)
+        if ratio < 1.0 - threshold:
+            regressions.append(row)
+        elif ratio > 1.0 + threshold:
+            improvements.append(row)
+        else:
+            other.append(row)
+    return regressions, improvements, other
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n\n")[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative slowdown that counts as a regression "
+                         "(default 0.20 = 20%%)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 if any gated row regressed (CI default "
+                         "is warn-only)")
+    args = ap.parse_args()
+
+    base = load_records(args.baseline)
+    cur = load_records(args.current)
+    regressions, improvements, other = compare(base, cur, args.threshold)
+
+    missing = sorted(set(base) - set(cur))
+    new = sorted(set(cur) - set(base))
+
+    def show(title, rows):
+        if not rows:
+            return
+        print(f"## {title}")
+        for name, b, c, ratio in rows:
+            pct = "" if ratio != ratio else f"  ({(ratio - 1) * 100:+.1f}%)"
+            print(f"  {name}: {b:.4g} -> {c:.4g}{pct}")
+
+    show(f"REGRESSIONS (> {args.threshold:.0%} worse)", regressions)
+    show(f"improvements (> {args.threshold:.0%} better)", improvements)
+    if missing:
+        print(f"## rows only in baseline: {', '.join(missing)}")
+    if new:
+        print(f"## rows only in current: {', '.join(new)}")
+    print(f"# {len(regressions)} regressions, {len(improvements)} "
+          f"improvements, {len(other)} within threshold, "
+          f"{len(missing)} missing, {len(new)} new")
+
+    if regressions and args.fail_on_regression:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

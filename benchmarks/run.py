@@ -52,8 +52,8 @@ def main() -> None:
                     help="paper-scale horizons (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig34,fig56,drift,kernels,"
-                         "sim_throughput,placement,replication,serving,"
-                         "serving_scenarios,trace_replay,roofline")
+                         "sim_throughput,scaling,placement,replication,"
+                         "serving,serving_scenarios,trace_replay,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="additionally write every bench row as a "
                          "machine-readable JSON perf record (the artifact "
@@ -67,6 +67,13 @@ def main() -> None:
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
+
+    from repro.utils.cache import enable_persistent_cache
+
+    cache_dir = enable_persistent_cache()
+    if cache_dir:
+        print(f"# persistent compilation cache: {cache_dir}",
+              file=sys.stderr)
 
     from benchmarks import bench_kernels, bench_roofline, bench_serving
     from benchmarks import bench_sim, figures
@@ -116,6 +123,7 @@ def main() -> None:
     section("drift", lambda: figures.fig_drift(fast))
     section("kernels", lambda: bench_kernels.bench(fast))
     section("sim_throughput", lambda: bench_sim.bench(fast, tracer=tracer))
+    section("scaling", lambda: bench_sim.bench_scaling(fast, tracer=tracer))
     section("placement",
             lambda: bench_sim.bench_placement(fast, tracer=tracer))
     section("replication",

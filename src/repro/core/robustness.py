@@ -86,7 +86,8 @@ def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
               signs: Sequence[int] = (-1, 1),
               scenario: ScenarioLike = None,
               placement: PlacementLike = None,
-              telemetry: TelemetryLike = None) -> Dict:
+              telemetry: TelemetryLike = None,
+              fleet=None) -> Dict:
     """Returns nested results:
     delay[algo]: (L, E, S) with E = 1 (exact) + len(eps_grid)*len(signs)
     plus the grids needed to plot.  Error settings only materialize for
@@ -122,7 +123,8 @@ def run_study(cfg: StudyConfig, algos: Optional[Sequence[str]] = None,
     for algo in algos:
         stack = est_stack if algo in RATE_AWARE else est_stack[:1]
         res = sim.sweep(algo, cfg.sim, lam, stack, seeds, scenario=scenario,
-                        placement=placement, telemetry=telemetry)
+                        placement=placement, telemetry=telemetry,
+                        fleet=fleet)
         out["delay"][algo] = res["mean_delay"]
         out["throughput"][algo] = res["throughput"]
         out["final_n"][algo] = res["final_n"]

@@ -281,18 +281,53 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
     return run
 
 
+def _fleet_engaged(fleet, policy, cfg, scenario, placement, replication,
+                   telemetry) -> bool:
+    """Resolve the ``fleet=`` seam shared by simulate/sweep.
+
+    ``False`` -> dense, always.  ``True`` / a FleetConfig -> fleet path,
+    raising if the configuration has no fleet step.  ``None`` (default)
+    -> auto: fleet only when supported AND the topology is at least
+    ``sharding.sim.FLEET_AUTO_THRESHOLD`` servers, so every paper-scale
+    run keeps the faithful (bitwise-pinned) dense path.
+    """
+    if fleet is False:
+        return False
+    from repro.sharding import sim as fleet_sim  # lazy: avoids a cycle
+    reason = fleet_sim.fleet_supported(policy, cfg, scenario, placement,
+                                       replication, telemetry)
+    if fleet is None:
+        return (reason is None and cfg.topo.num_servers
+                >= fleet_sim.FLEET_AUTO_THRESHOLD)
+    if reason is not None:
+        raise ValueError(f"fleet=True requested but unsupported: {reason}")
+    return True
+
+
 def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
              est: np.ndarray, seed: int = 0,
              scenario: wl.ScenarioLike = None,
              placement: PlacementLike = None,
              replication: ReplicationLike = None,
-             telemetry: TelemetryLike = None) -> Dict[str, Any]:
+             telemetry: TelemetryLike = None,
+             fleet=None) -> Dict[str, Any]:
     """Single-configuration run (jit-compiled).  ``lam_total == 0`` yields
     ``mean_delay = NaN`` (Little's law is undefined); negative loads are
     rejected here.  Scalar metrics come back as floats; array-valued
-    telemetry metrics (histograms, the series) as numpy arrays."""
+    telemetry metrics (histograms, the series) as numpy arrays.
+
+    ``fleet`` selects the fleet-scale backend (`repro.sharding.sim`):
+    ``None`` auto-engages it for supported configurations at
+    >= 1024 servers, ``True``/`FleetConfig` forces it (raising when the
+    configuration has no fleet step), ``False`` pins the dense path.
+    """
     if lam_total < 0:
         raise ValueError(f"lam_total must be >= 0, got {lam_total}")
+    if _fleet_engaged(fleet, policy, cfg, scenario, placement, replication,
+                      telemetry):
+        from repro.sharding import sim as fleet_sim
+        return fleet_sim.fleet_simulate(policy, cfg, lam_total, est, seed,
+                                        fleet)
     run = jax.jit(_build_run(policy, cfg, scenario, placement, replication,
                              telemetry))
     out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
@@ -309,7 +344,8 @@ def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
           scenario: wl.ScenarioLike = None,
           placement: PlacementLike = None,
           replication: ReplicationLike = None,
-          telemetry: TelemetryLike = None) -> Dict[str, np.ndarray]:
+          telemetry: TelemetryLike = None,
+          fleet=None) -> Dict[str, np.ndarray]:
     """Full cartesian sweep, vmapped: results have shape (L, E, S).
 
     lam_grid: (L,) loads; est_stack: (E, M, K); seeds: (S,).  The scenario
@@ -323,6 +359,11 @@ def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
     """
     if np.any(np.asarray(lam_grid) < 0):
         raise ValueError(f"lam_grid must be >= 0, got {lam_grid}")
+    if _fleet_engaged(fleet, policy, cfg, scenario, placement, replication,
+                      telemetry):
+        from repro.sharding import sim as fleet_sim
+        return fleet_sim.fleet_sweep(policy, cfg, lam_grid, est_stack,
+                                     seeds, fleet)
     run = _build_run(policy, cfg, scenario, placement, replication,
                      telemetry)
     f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),

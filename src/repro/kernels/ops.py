@@ -18,6 +18,7 @@ import numpy as np
 from repro.kernels import flash_attention as _fa
 from repro.kernels import maxweight as _mw
 from repro.kernels import ref
+from repro.kernels import slot_step as _slot
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import wwl_route as _wwl
 
@@ -72,6 +73,44 @@ def wwl_route(workload, est_rates, server_anc, task_locals, *,
     tl = _pad_to(jnp.asarray(task_locals, jnp.int32), bt, 0, 0)
     server, tier, score = _wwl.wwl_route_pallas(
         wl, er, sa, tl, block_tasks=bt, block_servers=bs, interpret=interpret)
+    server, tier, score = server[:b], tier[:b], score[:b]
+    if k2:
+        tier = jnp.minimum(tier, 1)  # collapse the synthetic level
+    return server, tier, score
+
+
+def fleet_route(q, serving, est_rates, server_anc, task_locals, *,
+                block_tasks: int = 128, block_servers: int = 512,
+                interpret: bool | None = None):
+    """Fused fleet slot-step private routing.  See ref.fleet_route.
+
+    `server_anc` is the (depth, M) `Topology.ancestors` table (a legacy
+    (M,) rack map is accepted).  Accepts arbitrary B, M; pads internally
+    (padding servers carry q=0/serving=0/rate=1 and pad ancestor ids that
+    collide only with each other, so they sit on the masked remote tier
+    and never win the argmin).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, m = task_locals.shape[0], q.shape[0]
+    anc = jnp.asarray(server_anc, jnp.int32)
+    anc = anc[None, :] if anc.ndim == 1 else anc
+    er = jnp.asarray(est_rates, jnp.float32)
+    qf = jnp.asarray(q, jnp.float32)
+    k2 = anc.shape[0] == 0
+    if k2:
+        anc, er = _dilate_depth0(er, jnp.arange(m))
+        qf = jnp.concatenate([qf[:, :1], jnp.zeros_like(qf[:, :1]),
+                              qf[:, 1:2]], axis=1)
+    bs = min(block_servers, _round_up(m, 128))
+    bt = min(block_tasks, _round_up(b, 8))
+    qf = _pad_to(qf, bs, 0, 0.0)
+    sv = _pad_to(jnp.asarray(serving, jnp.int32), bs, 0, 0)
+    er = _pad_to(er, bs, 0, 1.0)
+    sa = _pad_to(anc, bs, 1, np.int32(2**30))
+    tl = _pad_to(jnp.asarray(task_locals, jnp.int32), bt, 0, 0)
+    server, tier, score = _slot.fleet_route_pallas(
+        qf, sv, er, sa, tl, block_tasks=bt, block_servers=bs,
+        interpret=interpret)
     server, tier, score = server[:b], tier[:b], score[:b]
     if k2:
         tier = jnp.minimum(tier, 1)  # collapse the synthetic level

@@ -56,6 +56,58 @@ def wwl_route(workload: jnp.ndarray, est_rates: jnp.ndarray,
     return server, tier[b, server], score[b, server]
 
 
+def fleet_route(q: jnp.ndarray, serving: jnp.ndarray, est_rates: jnp.ndarray,
+                server_anc: jnp.ndarray, task_locals: jnp.ndarray):
+    """Fused fleet slot-step private routing (workload + masked argmin).
+
+    q:           (M,K)  f32/i32 waiting tasks per (server, tier)
+    serving:     (M,)   i32     class in service (0 idle, 1..K)
+    est_rates:   (M,K)  f32     per-server estimated tier rates
+    server_anc:  (D,M)  i32     ancestor table (legacy (M,) rack map ok)
+    task_locals: (B,3)  i32     local servers per task
+
+    Workload is computed from (q, serving) exactly as
+    `core.balanced_pandas.workload` (left-associative tier sum plus the
+    in-service residual), then each task argmins W_m / rate - rate * 1e-6
+    over its *private* servers only — those at a tier strictly better
+    than remote (tier < K-1).  Remote-tier servers are masked out; the
+    fleet backend fills the remote pool by water-filling instead of
+    per-task argmin.  Returns (server (B,) i32, tier (B,) i32, score
+    (B,) f32 with +LARGE for tasks whose best option is remote).  Ties
+    break to the lowest server index.
+    """
+    anc = _as_anc(server_anc)
+    d, m = anc.shape
+    est = jnp.asarray(est_rates, jnp.float32)
+    qf = jnp.asarray(q, jnp.float32)
+    k = qf.shape[1]
+    w = qf[:, 0] / est[:, 0]
+    for t in range(1, k):
+        w = w + qf[:, t] / est[:, t]
+    resid_idx = jnp.clip(serving - 1, 0, k - 1)
+    resid = jnp.take_along_axis(est, resid_idx[:, None], axis=1)[:, 0]
+    w = w + jnp.where(serving > 0, 1.0 / resid, 0.0)
+
+    sid = jnp.arange(m, dtype=task_locals.dtype)
+    local = jnp.any(sid[None, :, None] == task_locals[:, None, :], axis=-1)
+    tier = jnp.full(local.shape, d + 1, jnp.int32)
+    rate = jnp.broadcast_to(est[None, :, d + 1], local.shape)
+    for lvl in range(d - 1, -1, -1):
+        row = anc[lvl]
+        task_groups = row[task_locals]  # (B, 3)
+        share = jnp.any(row[None, :, None] == task_groups[:, None, :],
+                        axis=-1)
+        tier = jnp.where(share, lvl + 1, tier)
+        rate = jnp.where(share, est[None, :, lvl + 1], rate)
+    tier = jnp.where(local, 0, tier)
+    rate = jnp.where(local, est[None, :, 0], rate)
+    score = w[None, :] / rate - rate * 1e-6
+    score = jnp.where(tier <= d, score, 3.0e38)
+    server = jnp.argmin(score, axis=1).astype(jnp.int32)
+    b = jnp.arange(task_locals.shape[0])
+    return server, tier[b, server], score[b, server]
+
+
 # ------------------------------------------------------------- maxweight ---
 
 def maxweight_claim(queues: jnp.ndarray, queue_anc: jnp.ndarray,

@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: fused fleet slot-step routing (workload + private argmin).
+
+The fleet backend (`sharding/sim.py`) splits Balanced-PANDAS routing of a
+B-task arrival batch into a *private* phase (each task scores the servers
+that are local / rack-local / ... / anything better than the remote tier)
+and a shared *pool* phase (the remote tier is filled globally by a
+water-level computation, outside this kernel — it couples all tasks in the
+slot).  This kernel fuses the private phase with the workload computation
+it consumes:
+
+    W_m     = sum_k q[m, k] / est[m, k]  (+ in-service residual)
+    score   = W_m / est[m, tier(m, task)] - est[...] * 1e-6
+    out_b   = argmin over servers with tier(m, task) < K-1
+
+so one kernel launch replaces the per-slot chain of dense XLA ops
+(workload reduction, per-task tier derivation, masked argmin) that
+dominates dispatch time on CPU at M >= 10^4.  Compare `wwl_route.py`,
+which scores ALL servers (including the remote tier) against a
+precomputed workload vector: the fused kernel reads the raw policy state
+(q, serving) instead, and masks the remote tier out, because the fleet
+path assigns remote traffic by water-filling rather than per-task argmin
+(B tasks hitting the same remote argmin would pile onto one server —
+see docs/scaling.md).
+
+The ``- rate * 1e-6`` term is the same infinitesimal faster-tier
+preference the sequential simulator applies on exact workload ties
+(`core/balanced_pandas.route_one`); tie-breaking among equal scores is
+lowest-server-index (deterministic), as in the other scheduling kernels.
+
+Semantics contract: `ref.fleet_route`.  The XLA realization used for the
+CPU hot loop lives in `sharding/sim.py` (segment-min candidates); it is
+exact against the same oracle (fuzzed in tests/test_fleet_scale.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LARGE = 3.0e38  # +inf surrogate inside min-accumulators (matches wwl_route)
+
+
+def _fleet_route_kernel(q_ref, serving_ref, rates_ref, anc_ref, locals_ref,
+                        lanc_ref, score_ref, server_ref, tier_ref, *,
+                        block_m: int, depth: int):
+    """One (task-block, server-block) tile.
+
+    q_ref:       (bm, K)      f32   waiting tasks per (server, tier)
+    serving_ref: (bm,)        i32   class in service (0 idle, 1..K)
+    rates_ref:   (bm, K)      f32   est tier rates slice (K = depth + 2)
+    anc_ref:     (D, bm)      i32   ancestor table slice of this block
+    locals_ref:  (bt, 3)      i32   task local servers
+    lanc_ref:    (bt, D, 3)   i32   ancestor groups of those locals
+    score_ref:   (bt,)        f32   running min private score   (revisited)
+    server_ref:  (bt,)        i32   running argmin server       (revisited)
+    tier_ref:    (bt,)        i32   tier at argmin              (revisited)
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, LARGE)
+        server_ref[...] = jnp.zeros_like(server_ref)
+        tier_ref[...] = jnp.zeros_like(tier_ref)
+
+    q = q_ref[...]                             # (bm, K)
+    rates = rates_ref[...]                     # (bm, K)
+    serving = serving_ref[...]                 # (bm,)
+    locs = locals_ref[...]                     # (bt, 3)
+    k = q.shape[1]
+
+    # fused workload: left-associative tier sum + in-service residual,
+    # matching core/balanced_pandas.workload bit-for-bit
+    w = q[:, 0] / rates[:, 0]
+    for t in range(1, k):
+        w = w + q[:, t] / rates[:, t]
+    resid_idx = jnp.clip(serving - 1, 0, k - 1)
+    resid_rate = jnp.take_along_axis(rates, resid_idx[:, None], axis=1)[:, 0]
+    w = w + jnp.where(serving > 0, 1.0 / resid_rate, 0.0)
+
+    bt = locs.shape[0]
+    bm = w.shape[0]
+    sid = j * block_m + jax.lax.broadcasted_iota(jnp.int32, (bt, bm), 1)
+
+    local = (sid == locs[:, 0:1]) | (sid == locs[:, 1:2]) | (sid == locs[:, 2:3])
+    # remote by default; sharpen tier/rate level by level, deepest first —
+    # the depth loop is unrolled at trace time (static shape)
+    tier = jnp.full((bt, bm), depth + 1, jnp.int32)
+    rate = jnp.broadcast_to(rates[None, :, depth + 1], (bt, bm))
+    for lvl in range(depth - 1, -1, -1):
+        anc_row = anc_ref[lvl, :]              # (bm,)
+        lanc = lanc_ref[...][:, lvl, :]        # (bt, 3)
+        rk = jnp.broadcast_to(anc_row[None, :], (bt, bm))
+        share = ((rk == lanc[:, 0:1]) | (rk == lanc[:, 1:2])
+                 | (rk == lanc[:, 2:3]))
+        tier = jnp.where(share, lvl + 1, tier)
+        rate = jnp.where(share, rates[None, :, lvl + 1], rate)
+    tier = jnp.where(local, 0, tier)
+    rate = jnp.where(local, rates[None, :, 0], rate)
+    score = jnp.broadcast_to(w[None, :], (bt, bm)) / rate - rate * 1e-6
+    # the private mask: the remote tier (K-1 = depth+1) is pool-filled
+    score = jnp.where(tier <= depth, score, LARGE)
+
+    blk_min = jnp.min(score, axis=1)                       # (bt,)
+    blk_arg = jnp.argmin(score, axis=1).astype(jnp.int32)  # (bt,)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bt, 1), 0)[:, 0]
+    blk_tier = tier[rows, blk_arg]
+
+    best = score_ref[...]
+    better = blk_min < best                    # strict: keeps lowest index
+    score_ref[...] = jnp.where(better, blk_min, best)
+    server_ref[...] = jnp.where(better, j * block_m + blk_arg, server_ref[...])
+    tier_ref[...] = jnp.where(better, blk_tier, tier_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_tasks", "block_servers",
+                                             "interpret"))
+def fleet_route_pallas(q: jnp.ndarray, serving: jnp.ndarray,
+                       est_rates: jnp.ndarray, server_anc: jnp.ndarray,
+                       task_locals: jnp.ndarray, *, block_tasks: int = 128,
+                       block_servers: int = 512, interpret: bool = False):
+    """Padded, tiled fused workload + private-route.  See ref.fleet_route.
+
+    q (M, K) f32, serving (M,) i32, est_rates (M, K) f32, server_anc the
+    (depth, M) ancestor table.  Caller guarantees M % block_servers == 0
+    and B % block_tasks == 0 (ops.fleet_route pads; padding servers carry
+    pad ancestor ids that collide only with each other, so they land on
+    the masked remote tier and never win).
+    """
+    b = task_locals.shape[0]
+    m = q.shape[0]
+    depth = server_anc.shape[0]
+    grid = (b // block_tasks, m // block_servers)
+    task_lanc = jnp.swapaxes(server_anc[:, task_locals], 0, 1)
+
+    kernel = functools.partial(_fleet_route_kernel, block_m=block_servers,
+                               depth=depth)
+    score, server, tier = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_servers, depth + 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_servers,), lambda i, j: (j,)),
+            pl.BlockSpec((block_servers, depth + 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((depth, block_servers), lambda i, j: (0, j)),
+            pl.BlockSpec((block_tasks, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_tasks, depth, 3), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_tasks,), lambda i, j: (i,)),
+            pl.BlockSpec((block_tasks,), lambda i, j: (i,)),
+            pl.BlockSpec((block_tasks,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q.astype(jnp.float32), serving.astype(jnp.int32),
+      est_rates.astype(jnp.float32), server_anc.astype(jnp.int32),
+      task_locals.astype(jnp.int32), task_lanc.astype(jnp.int32))
+    return server, tier, score

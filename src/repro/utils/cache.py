@@ -1,0 +1,46 @@
+"""Opt-in JAX persistent compilation cache.
+
+The fleet chunk program at M=10008 takes minutes to compile on one CPU
+core; across bench runs and test sessions the program is byte-identical,
+so the XLA compilation cache turns every run after the first into a disk
+read.  Opt in by exporting
+
+    REPRO_JAX_CACHE_DIR=/path/to/cache
+
+before running ``benchmarks/run.py`` or the test suite (tests/conftest.py
+calls `enable_persistent_cache()` at collection time).  Unset, this module
+does nothing — CI machines with ephemeral disks and single-shot runs pay
+no cache-write overhead.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+_ENV_VAR = "REPRO_JAX_CACHE_DIR"
+_enabled_dir: str | None = None
+
+
+def enable_persistent_cache() -> str | None:
+    """Point JAX's compilation cache at ``$REPRO_JAX_CACHE_DIR``.
+
+    Returns the cache directory if enabled (creating it if needed), else
+    None.  Idempotent — safe to call from several entry points.
+    """
+    global _enabled_dir
+    cache_dir = os.environ.get(_ENV_VAR)
+    if not cache_dir:
+        return None
+    if _enabled_dir == cache_dir:
+        return _enabled_dir
+    Path(cache_dir).mkdir(parents=True, exist_ok=True)
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    # cache everything, including sub-second compiles: the suite's many
+    # small jit programs add up on one core
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    _enabled_dir = cache_dir
+    return _enabled_dir

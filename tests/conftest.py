@@ -1,12 +1,20 @@
 """Test-suite bootstrap.
 
-When the real `hypothesis` package is unavailable (minimal containers where
-nothing can be pip-installed), install a tiny deterministic stand-in so the
-suite still collects and the property tests still run — each `@given` test
-executes a fixed number of seeded pseudo-random examples instead of
-hypothesis's managed search.  The stub covers exactly the strategy surface
-this repo uses (`integers`, `floats`, `lists`, `sampled_from`); with
-hypothesis installed (see pyproject.toml) it is never touched.
+Two jobs:
+
+1. Opt-in persistent XLA compilation cache (`REPRO_JAX_CACHE_DIR=...`):
+   the suite jit-compiles hundreds of small programs plus a handful of
+   expensive fleet-scale ones; on a warm cache a full run saves minutes
+   of single-core compile time.  Unset, nothing changes.
+
+2. When the real `hypothesis` package is unavailable (minimal containers
+   where nothing can be pip-installed), install a tiny deterministic
+   stand-in so the suite still collects and the property tests still run —
+   each `@given` test executes a fixed number of seeded pseudo-random
+   examples instead of hypothesis's managed search.  The stub covers
+   exactly the strategy surface this repo uses (`integers`, `floats`,
+   `lists`, `sampled_from`); with hypothesis installed (see
+   pyproject.toml) it is never touched.
 """
 
 from __future__ import annotations
@@ -17,6 +25,10 @@ import random
 import sys
 import types
 import zlib
+
+from repro.utils.cache import enable_persistent_cache
+
+enable_persistent_cache()
 
 try:
     import hypothesis  # noqa: F401

@@ -93,14 +93,16 @@ def test_pandas_workload_includes_in_service_residual():
 def test_uniform_rate_scaling_is_decision_invariant(algo):
     """Beyond-paper analytical result: scaling all estimates by c changes no
     decision, hence the whole sample path (see balanced_pandas docstring)."""
+    step = jax.jit(algo.slot_step)  # one compile, shared by both rollouts
+
     def rollout(est):
         s = algo.init_state(TOPO)
         ns = []
         for t in range(60):
             key = jax.random.PRNGKey(t)
             types, active = _arrivals(jax.random.fold_in(key, 1), lam=4.0)
-            s, _ = algo.slot_step(s, jax.random.fold_in(key, 2), types,
-                                  active, est, TRUE3, RACK_OF)
+            s, _ = step(s, jax.random.fold_in(key, 2), types, active, est,
+                        TRUE3, RACK_OF)
             ns.append(int(algo.num_in_system(s)))
         return ns
 
