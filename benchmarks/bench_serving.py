@@ -150,6 +150,69 @@ def bench_scenarios(fast: bool = True,
     return rows
 
 
+def bench_control(fast: bool = True, tracer=None):
+    """Host control plane on the live engine: drain steps + sojourn p95
+    per control arm (none / admission / autoscale), plus a closed-loop
+    client-driven run (steps to serve a fixed completion budget with N
+    think-time users).  The `none` arm is the pre-control reference —
+    control hooks off the hot path must cost nothing there.
+    """
+    import jax
+    from repro.configs import registry
+    from repro.models import params as P
+    from repro.serve.engine import EngineConfig, Request, ServingEngine
+
+    cfg = registry.get_smoke_config("chatglm3_6b")
+    prm = P.init_params(cfg, jax.random.PRNGKey(0))
+    n_req = 16 if fast else 48
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+               for _ in range(n_req)]
+    base = dict(num_replicas=4, replicas_per_pod=2, slots_per_replica=2,
+                max_len=64, prefill_buckets=(16,), tracer=tracer)
+
+    rows = []
+    arms = (
+        ("none", None),
+        ("admission", {"name": "token_bucket",
+                       "options": {"rate": 0.25, "burst": 8.0}}),
+        ("autoscale", {"name": "autoscale",
+                       "options": {"p95_high": 1e9, "p95_low": 1e8,
+                                   "down_after": 2, "cooldown": 2,
+                                   "min_servers": 1, "step_frac": 0.5}}),
+    )
+    for label, control in arms:
+        eng = ServingEngine(cfg, prm, EngineConfig(**base, control=control))
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=4, prefix_id=i % 5)
+                for i, p in enumerate(prompts)]
+        eng.run_until_drained(reqs, max_steps=600)
+        shed = 0 if eng.control is None else eng.control.shed
+        rows.append((f"serve_control_{label}", float(eng.steps),
+                     f"completed={eng.completed},shed={shed}"))
+        p95 = float(eng.sojourn_percentiles((0.95,))[0])
+        rows.append((f"serve_control_{label}_sojourn_p95", p95,
+                     "engine steps, submit -> finish, upper bin edge"))
+
+    # Closed loop: N users with think time drive the engine until a fixed
+    # completion budget is served; reported as steps to serve the budget.
+    budget = n_req
+    eng = ServingEngine(cfg, prm, EngineConfig(
+        **base, control={"name": "closed_loop",
+                         "options": {"users": 8, "think_time": 4.0}}))
+    clients = eng.control.clients
+    rid = 0
+    while eng.completed < budget and eng.steps < 600:
+        for _ in range(clients.poll(eng.steps, eng.completed)):
+            eng.submit(Request(
+                rid=rid, prompt=prompts[rid % len(prompts)],
+                max_new_tokens=4, prefix_id=rid % 5))
+            rid += 1
+        eng.step()
+    rows.append(("serve_control_closed_loop", float(eng.steps),
+                 f"steps to {budget} completions with 8 think-time users"))
+    return rows
+
+
 def replay_trace(spec=None, scheduler: str = "balanced_pandas",
                  fast: bool = True, export_path: Optional[str] = None):
     """Replay one trace-compiled Scenario through the live engine.

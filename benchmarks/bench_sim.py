@@ -205,6 +205,52 @@ def bench_placement(fast: bool = True, tracer=None):
     return rows
 
 
+def bench_control(fast: bool = True, tracer=None):
+    """Control-plane throughput: simulator slots/sec of the default policy
+    with each control arm compiled into the scan — no control (the
+    bitwise-pinned reference), token-bucket admission, closed-loop load
+    generation, proactive autoscaling, and the full stack with the
+    SLO-conditioned scheduler + telemetry (the §SLO control study
+    configuration).  Tracks what each per-slot hook costs relative to the
+    zero-cost ``control=None`` baseline.
+    """
+    import jax
+    from repro.core import locality as loc, simulator as sim
+
+    horizon = 2_000 if fast else 20_000
+    topo, rates = loc.Topology(24, 6), loc.Rates()
+    cfg = sim.SimConfig(topo=topo, true_rates=rates, p_hot=0.5,
+                        max_arrivals=24, horizon=horizon,
+                        warmup=horizon // 4)
+    cap = loc.capacity_hot_rack(topo, rates, cfg.p_hot)
+    est = sim.make_estimates(cfg, "network", 0.0, -1)
+    args = (np.float32(0.9 * cap), est.astype(np.float32), np.uint32(0))
+    bucket = {"name": "token_bucket",
+              "options": {"rate": 0.93 * cap, "burst": 8.0 * cap}}
+    arms = [
+        ("none", "balanced_pandas", None, None),
+        ("admission", "balanced_pandas", bucket, None),
+        ("closed_loop", "balanced_pandas",
+         {"name": "closed_loop", "options": {"users": 64}}, None),
+        ("autoscale", "balanced_pandas", "autoscale", None),
+        ("full_slo", "slo_pandas", (bucket, "autoscale"), True),
+    ]
+    rows = []
+    for label, pol, control, telemetry in arms:
+        run = jax.jit(sim._build_run(pol, cfg, control=control,
+                                     telemetry=telemetry))
+        t_compile, dt = _compile_split(run, args, tracer,
+                                       f"control_{label}")
+        derived = (f"control={label},policy={pol},K={topo.num_tiers},"
+                   f"M={topo.num_servers},horizon={horizon},"
+                   f"telemetry={bool(telemetry)}")
+        rows.append((f"sim_slots_per_sec_control_{label}", horizon / dt,
+                     derived))
+        rows.append((f"sim_compile_sec_control_{label}", t_compile,
+                     derived))
+    return rows
+
+
 def bench_replication(fast: bool = True, tracer=None):
     """Replication-lifecycle throughput: simulator slots/sec of the default
     policy under every registered replication controller, with the

@@ -12,6 +12,15 @@ A row regresses when it is more than ``--threshold`` (default 20%) worse
 than the baseline.  Everything is printed either way — the CI job runs
 warn-only (no ``--fail-on-regression``), so a noisy container can't block
 a merge, but the deltas land in the job log and the artifact trail.
+
+``--update`` refreshes the committed baseline in place: after printing
+the old-vs-new diff, CURRENT's artifact replaces BASELINE on disk.  Use
+it when a PR intentionally moves a number (new bench rows, a real
+speedup) so the next comparison measures against the new normal:
+
+    PYTHONPATH=src python -m benchmarks.run --json /tmp/BENCH_new.json
+    PYTHONPATH=src python -m benchmarks.compare \
+        benchmarks/BENCH_sim.json /tmp/BENCH_new.json --update
 """
 
 from __future__ import annotations
@@ -84,6 +93,9 @@ def main() -> None:
     ap.add_argument("--fail-on-regression", action="store_true",
                     help="exit 1 if any gated row regressed (CI default "
                          "is warn-only)")
+    ap.add_argument("--update", action="store_true",
+                    help="after printing the diff, overwrite BASELINE "
+                         "with CURRENT (refresh the committed baseline)")
     args = ap.parse_args()
 
     base = load_records(args.baseline)
@@ -110,6 +122,15 @@ def main() -> None:
     print(f"# {len(regressions)} regressions, {len(improvements)} "
           f"improvements, {len(other)} within threshold, "
           f"{len(missing)} missing, {len(new)} new")
+
+    if args.update:
+        # verbatim copy (not a re-dump) so the refreshed baseline is
+        # byte-identical to the artifact CI would have uploaded
+        with open(args.current) as f:
+            payload = f.read()
+        with open(args.baseline, "w") as f:
+            f.write(payload)
+        print(f"# baseline updated: {args.baseline} <- {args.current}")
 
     if regressions and args.fail_on_regression:
         sys.exit(1)

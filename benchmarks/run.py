@@ -20,7 +20,8 @@ from pathlib import Path
 
 def _registry_epilog() -> str:
     """Render the scenario/policy/placement registries for --help."""
-    from repro import placement as plc, replication as rep, workloads as wl
+    from repro import control as ctl, placement as plc, replication as rep
+    from repro import workloads as wl
     from repro.core import policy as pol
 
     def block(title, entries):
@@ -38,6 +39,8 @@ def _registry_epilog() -> str:
                    "pipeline)", plc.placement_descriptions())
     lines += block("registered replication controllers (lifecycle: "
                    "migration / repair)", rep.replication_descriptions())
+    lines += block("registered control-plane controllers (load generation / "
+                   "admission / autoscaling)", ctl.controller_descriptions())
     return "\n".join(lines)
 
 
@@ -53,7 +56,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig1,fig2,fig34,fig56,drift,kernels,"
                          "sim_throughput,scaling,placement,replication,"
-                         "serving,serving_scenarios,trace_replay,roofline")
+                         "control,serving,serving_scenarios,serving_control,"
+                         "trace_replay,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="additionally write every bench row as a "
                          "machine-readable JSON perf record (the artifact "
@@ -128,8 +132,11 @@ def main() -> None:
             lambda: bench_sim.bench_placement(fast, tracer=tracer))
     section("replication",
             lambda: bench_sim.bench_replication(fast, tracer=tracer))
+    section("control", lambda: bench_sim.bench_control(fast, tracer=tracer))
     section("serving", lambda: bench_serving.bench(fast, tracer=tracer))
     section("serving_scenarios", lambda: bench_serving.bench_scenarios(fast))
+    section("serving_control",
+            lambda: bench_serving.bench_control(fast, tracer=tracer))
     section("trace_replay", lambda: bench_serving.replay_trace(
         fast=fast, export_path="experiments/traces/replayed.jsonl"))
     section("roofline", lambda: bench_roofline.bench(fast))

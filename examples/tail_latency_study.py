@@ -41,14 +41,18 @@ def main() -> None:
     if args.smoke:
         # Bitwise gate: telemetry is pure observation (consumes no RNG,
         # mutates no policy state) — the plain run's every metric must be
-        # bitwise identical with the recorder compiled in, for all six
-        # registered policies.
-        from repro.core.policy import available_policies
+        # bitwise identical with the recorder compiled in, for every
+        # registered policy except the ones that OPT IN to reading the
+        # live signals (`uses_signals`, e.g. slo_pandas — the documented
+        # exception, pinned separately in tests/test_control.py).
+        from repro.core.policy import available_policies, get_policy_cls
         cfg_s = sim.SimConfig(topo=loc.Topology(12, 4),
                               true_rates=loc.Rates(), max_arrivals=16,
                               horizon=400, warmup=100)
         est = sim.make_estimates(cfg_s, "network", 0.0, -1)
         for pol in available_policies():
+            if getattr(get_policy_cls(pol), "uses_signals", False):
+                continue
             off = sim.simulate(pol, cfg_s, 3.0, est, seed=0)
             on = sim.simulate(pol, cfg_s, 3.0, est, seed=0, telemetry=True)
             for k, v in off.items():

@@ -1,0 +1,241 @@
+"""Built-in controllers: open/closed-loop load generation, token-bucket
+and queue-threshold admission, and headroom/hysteresis autoscaling.
+
+All sim-side hooks are deterministic functions of the carry (zero RNG),
+so engaging a controller never consumes extra PRNG draws — the common-
+random-number coupling across policy arms survives control (the same
+`fold_in(base, t)` keys drive arrivals/routing with or without a plane).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.control.plane import (
+    AdmissionController,
+    AutoscaleController,
+    LoadGenController,
+    register_controller,
+)
+
+
+@register_controller
+@dataclasses.dataclass(frozen=True)
+class OpenLoopLoadGen(LoadGenController):
+    """Open-loop load generator: replay the scenario's rate track
+    untouched (rate-driven arrivals, no completion feedback).
+
+    This is the explicit spelling of the default traffic model — useful
+    as the identity arm of a study and as the seam where a custom track
+    would plug in.  `extra_mult` rescales the whole track (a study-level
+    rho knob that leaves the scenario object untouched)."""
+
+    name = "open_loop"
+    extra_mult: float = 1.0
+
+    def __post_init__(self):
+        if self.extra_mult < 0.0:
+            raise ValueError("extra_mult must be >= 0")
+
+    def sim_offered(self, in_flight, lam_total, knobs):
+        return lam_total * knobs.lam_mult * self.extra_mult, None
+
+
+@register_controller
+@dataclasses.dataclass(frozen=True)
+class ClosedLoopLoadGen(LoadGenController):
+    """Closed-loop load generator: N think-time users, arrivals gated on
+    completions (in-system never exceeds the user count).
+
+    The load-tester model: each of ``users`` clients holds at most one
+    task in the system and thinks for a mean of ``think_time`` slots
+    between completion and next submission.  Per slot, the thinking
+    population is ``max(users_t - in_flight, 0)`` and the offered rate is
+    ``thinking / think_time``; admitted arrivals are additionally capped
+    at the thinking count so ``in_flight <= users_t`` holds exactly.  The
+    scenario's ``users_mult`` track scales ``users_t`` over time (the
+    closed-loop analogue of ``lam_mult`` — the configured ``lam_total``
+    is intentionally ignored, and `simulate`'s Little's-law denominator
+    switches to the measured admitted rate)."""
+
+    name = "closed_loop"
+    users: int = 64
+    think_time: float = 8.0
+
+    def __post_init__(self):
+        if self.users < 1:
+            raise ValueError("users must be >= 1")
+        if self.think_time <= 0.0:
+            raise ValueError("think_time must be > 0")
+
+    def _users_t(self, knobs):
+        mult = getattr(knobs, "users_mult", None)
+        if mult is None:
+            return jnp.asarray(self.users, jnp.int32)
+        return jnp.maximum(jnp.round(self.users * mult), 1.0).astype(jnp.int32)
+
+    def sim_offered(self, in_flight, lam_total, knobs):
+        users_t = self._users_t(knobs)
+        thinking = jnp.maximum(users_t - in_flight, 0)
+        lam = thinking.astype(jnp.float32) / jnp.float32(self.think_time)
+        return lam, thinking
+
+    def host_clients(self, seed: int = 0):
+        from repro.control.host import ClosedLoopClients
+        return ClosedLoopClients(users=self.users, think_time=self.think_time,
+                                 seed=seed)
+
+
+@register_controller
+@dataclasses.dataclass(frozen=True)
+class TokenBucketAdmission(AdmissionController):
+    """Token-bucket admission: refill ``rate`` tokens/slot up to
+    ``burst``; arrivals beyond the bucket are shed (or deferred).
+
+    The classic rate limiter: long-run admitted throughput is capped at
+    ``rate`` while bursts up to ``burst`` pass unhindered.  With
+    ``defer=True`` rejected arrivals join a bounded backlog
+    (``backlog_cap``) and re-enter on later slots as spare fixed-shape
+    arrival lanes free up; past the cap they are shed.  The bucket starts
+    full."""
+
+    name = "token_bucket"
+    rate: float = 1.0
+    burst: float = 16.0
+    defer: bool = False
+    backlog_cap: float = 256.0
+
+    def __post_init__(self):
+        if self.rate < 0.0:
+            raise ValueError("rate must be >= 0")
+        if self.burst < 1.0:
+            raise ValueError("burst must be >= 1")
+        if self.backlog_cap < 0.0:
+            raise ValueError("backlog_cap must be >= 0")
+
+    def sim_init(self):
+        return float(self.burst), 0.0
+
+    def sim_admit(self, tokens, backlog, n_arr, n_sys, spare):
+        tokens = jnp.minimum(tokens + self.rate, self.burst)
+        n_admit = jnp.minimum(n_arr, jnp.floor(tokens).astype(jnp.int32))
+        tokens = tokens - n_admit.astype(jnp.float32)
+        rejected = n_arr - n_admit
+        if not self.defers:
+            return tokens, backlog, n_admit, jnp.int32(0), rejected
+        # Deferred arrivals re-enter through spare lanes, still paying
+        # tokens; whatever exceeds the backlog cap is shed.
+        n_release = jnp.minimum(
+            jnp.minimum(jnp.floor(backlog).astype(jnp.int32), spare),
+            jnp.floor(tokens).astype(jnp.int32))
+        tokens = tokens - n_release.astype(jnp.float32)
+        backlog = backlog - n_release + rejected
+        overflow = jnp.maximum(backlog - self.backlog_cap, 0.0)
+        backlog = backlog - overflow
+        n_shed = jnp.round(overflow).astype(jnp.int32)
+        return tokens, backlog, n_admit, n_release, n_shed
+
+    @property
+    def defers(self) -> bool:
+        return self.defer
+
+    def host_init(self) -> dict:
+        return {"tokens": float(self.burst), "last_step": None}
+
+    def host_admit(self, state: dict, step: int, n_sys: int) -> bool:
+        last = state["last_step"]
+        if last is None:
+            last = step
+        state["tokens"] = min(state["tokens"] + self.rate * (step - last),
+                              self.burst)
+        state["last_step"] = step
+        if state["tokens"] >= 1.0:
+            state["tokens"] -= 1.0
+            return True
+        return False
+
+
+@register_controller
+@dataclasses.dataclass(frozen=True)
+class QueueThresholdAdmission(AdmissionController):
+    """Queue-threshold admission: shed arrivals whenever in-system work
+    already meets ``threshold`` (a hard cap on total backlog).
+
+    The simplest overload guard — admitted arrivals per slot are
+    ``clip(threshold - n_sys, 0, n_arr)``, so the post-admission system
+    size never exceeds ``threshold`` by more than the service lag."""
+
+    name = "queue_threshold"
+    threshold: int = 128
+
+    def __post_init__(self):
+        if self.threshold < 1:
+            raise ValueError("threshold must be >= 1")
+
+    def sim_admit(self, tokens, backlog, n_arr, n_sys, spare):
+        room = jnp.maximum(jnp.int32(self.threshold) - n_sys, 0)
+        n_admit = jnp.minimum(n_arr, room)
+        return tokens, backlog, n_admit, jnp.int32(0), n_arr - n_admit
+
+    def host_admit(self, state: dict, step: int, n_sys: int) -> bool:
+        return n_sys < self.threshold
+
+
+@register_controller
+@dataclasses.dataclass(frozen=True)
+class HeadroomAutoscale(AutoscaleController):
+    """Autoscaler: keep ``headroom`` x the offered load in active local
+    service capacity (sim: planned from the rate track; host: reactive
+    p95 thresholds with hysteresis + cooldown via `launch.elastic`).
+
+    The sim projection is proactive — inside the scan the offered-rate
+    track is known, so the active count each slot is
+    ``clip(ceil(headroom * lam_eff / rate0), min_servers, M)``: enough
+    tier-0 capacity to absorb the load times a safety factor.  The host
+    projection cannot see the future, so it reacts to the engine's
+    measured sojourn p95: ``up_after`` consecutive breaches of
+    ``p95_high`` grow the fleet by ``step_frac``, ``down_after``
+    consecutive readings under ``p95_low`` shrink it, with ``cooldown``
+    steps between actions (see `launch.elastic.Autoscaler`).  Descaled
+    servers drain: routing stops sending them work (scores masked to
+    +inf) but queued tasks keep serving — distinct from the PR 6 `alive`
+    track, where dead servers stop serving AND lose replicas."""
+
+    name = "autoscale"
+    headroom: float = 1.35
+    min_servers: Optional[int] = None
+    p95_high: float = 64.0
+    p95_low: float = 16.0
+    up_after: int = 2
+    down_after: int = 8
+    cooldown: int = 16
+    step_frac: float = 0.25
+
+    def __post_init__(self):
+        if self.headroom <= 0.0:
+            raise ValueError("headroom must be > 0")
+        if self.min_servers is not None and self.min_servers < 1:
+            raise ValueError("min_servers must be >= 1")
+        if not (0.0 < self.step_frac <= 1.0):
+            raise ValueError("step_frac must be in (0, 1]")
+
+    def _min_servers(self, num_servers: int, floor: int) -> int:
+        lo = self.min_servers if self.min_servers is not None else floor
+        return max(1, min(lo, num_servers))
+
+    def sim_target(self, lam_eff, num_servers: int, rate0: float):
+        need = jnp.ceil(self.headroom * lam_eff / jnp.float32(rate0))
+        lo = self._min_servers(num_servers, 1)
+        return jnp.clip(need.astype(jnp.int32), lo, num_servers)
+
+    def host_autoscaler(self, num_servers: int, min_servers: int):
+        from repro.launch.elastic import Autoscaler
+        return Autoscaler(
+            min_servers=self._min_servers(num_servers, min_servers),
+            max_servers=num_servers,
+            p95_high=self.p95_high, p95_low=self.p95_low,
+            up_after=self.up_after, down_after=self.down_after,
+            cooldown=self.cooldown, step_frac=self.step_frac)

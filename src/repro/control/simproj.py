@@ -1,0 +1,162 @@
+"""`lax.scan` projection of a control plane: fixed-shape, zero-RNG
+per-slot hooks threaded through the simulator carry.
+
+The step seam (see `core/simulator._build_run`) is three hooks around
+the existing arrival -> route -> serve slot:
+
+  1. `offered_lam` (pre-arrival): the loadgen shapes the offered rate —
+     closed-loop derives it from the thinking population, open-loop
+     replays the scenario track — and optionally caps admitted count;
+  2. `pre` (post-arrival, pre-routing): the loadgen cap and the
+     admission controller trim the fixed-shape `active` lane mask
+     (shedding/deferring BEFORE routing, so a shed task never touches a
+     queue or the telemetry sojourn pairing), and the autoscaler turns
+     the slot's offered rate into a boolean (M,) active-server mask via
+     the locality-aware `scale_priority` rank;
+  3. `post`-accounting happens inside `pre` (window-gated counters), so
+     the conservation invariant ``offered == admitted + shed + backlog``
+     holds slot-by-slot by construction (property-tested in
+     tests/test_control.py).
+
+Deferred arrivals re-enter through spare fixed-shape lanes on later
+slots; their task types are re-sampled at release time (the fixed-shape
+reading of "the deferred user retries with a fresh request").  All hooks
+are deterministic in the carry — no PRNG draws — so common random
+numbers across arms survive engagement.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.control.plane import ControlPlane, scale_priority
+
+
+class CtlState(NamedTuple):
+    """Control-plane slice of the scan carry (all in-window counters
+    except the bucket/backlog levels, which are live)."""
+
+    offered: jnp.ndarray     # i32: candidate arrivals (post loadgen cap)
+    admitted: jnp.ndarray    # i32: entered the system (incl. releases)
+    shed: jnp.ndarray        # i32: rejected outright
+    tokens: jnp.ndarray      # f32: token-bucket level
+    backlog: jnp.ndarray     # f32: deferred arrivals awaiting release
+    active_sum: jnp.ndarray  # f32: sum of active-server counts
+    active_n: jnp.ndarray    # f32: slots accumulated into active_sum
+    active_min: jnp.ndarray  # f32: min active-server count seen
+
+
+class SimControl:
+    """Compiled control plane for one (topology, config, schedule)."""
+
+    def __init__(self, plane: ControlPlane, topo, cfg, sched, rate0: float):
+        self.plane = plane
+        self.max_arrivals = int(cfg.max_arrivals)
+        self.num_servers = int(topo.num_servers)
+        self.rate0 = float(rate0)
+        self.has_mask = plane.autoscale is not None
+        # Rank r server is the r-th kept on shrink (round-robin across
+        # racks, so a shrunken fleet still spans every rack).
+        self._rank = jnp.asarray(scale_priority(topo), jnp.int32) \
+            if self.has_mask else None
+
+    # -- carry ------------------------------------------------------------
+
+    def init(self) -> CtlState:
+        adm = self.plane.admission
+        tokens, backlog = adm.sim_init() if adm is not None else (0.0, 0.0)
+        m = float(self.num_servers)
+        return CtlState(
+            offered=jnp.int32(0), admitted=jnp.int32(0), shed=jnp.int32(0),
+            tokens=jnp.float32(tokens), backlog=jnp.float32(backlog),
+            active_sum=jnp.float32(0.0), active_n=jnp.float32(0.0),
+            active_min=jnp.float32(m))
+
+    # -- per-slot hooks ---------------------------------------------------
+
+    def offered_lam(self, n_prev, lam_total, knobs):
+        """Slot's offered rate (traced f32) + optional admitted-count cap
+        (traced i32 or None).  Stateless: gates on the POLICY's in-system
+        count, so closed-loop stays exact even for policies that drop
+        internally (FIFO's cap)."""
+        lg = self.plane.loadgen
+        if lg is None:
+            return lam_total * knobs.lam_mult, None
+        return lg.sim_offered(n_prev, lam_total, knobs)
+
+    def pre(self, st: CtlState, active, cap, n_prev, lam_eff, in_window
+            ) -> Tuple[CtlState, jnp.ndarray, Optional[jnp.ndarray]]:
+        """Trim the lane mask (loadgen cap + admission) and compute the
+        slot's active-server mask (autoscale).  Returns
+        (state', active', server_mask-or-None)."""
+        lanes = jnp.arange(self.max_arrivals)
+        n_arr = jnp.sum(active).astype(jnp.int32)
+        if cap is not None:
+            # Closed loop: a thinking user who hasn't finished thinking
+            # cannot submit — excess Poisson draws are never offered.
+            n_arr = jnp.minimum(n_arr, cap.astype(jnp.int32))
+        adm = self.plane.admission
+        tokens, backlog = st.tokens, st.backlog
+        if adm is not None:
+            spare = jnp.int32(self.max_arrivals) - n_arr
+            tokens, backlog, n_admit, n_release, n_shed = adm.sim_admit(
+                tokens, backlog, n_arr, n_prev, spare)
+        else:
+            n_admit = n_arr
+            n_release = jnp.int32(0)
+            n_shed = jnp.int32(0)
+        n_new = jnp.minimum(n_admit + n_release, self.max_arrivals)
+        active = lanes < n_new
+        in_w = in_window.astype(jnp.int32)
+        st = st._replace(
+            offered=st.offered + n_arr * in_w,
+            admitted=st.admitted + n_new * in_w,
+            shed=st.shed + n_shed * in_w,
+            tokens=tokens, backlog=backlog)
+        mask = None
+        if self.has_mask:
+            count = self.plane.autoscale.sim_target(
+                lam_eff, self.num_servers, self.rate0)
+            mask = self._rank < count
+            in_f = in_window.astype(jnp.float32)
+            cnt_f = count.astype(jnp.float32)
+            st = st._replace(
+                active_sum=st.active_sum + cnt_f * in_f,
+                active_n=st.active_n + in_f,
+                active_min=jnp.where(in_window,
+                                     jnp.minimum(st.active_min, cnt_f),
+                                     st.active_min))
+        return st, active, mask
+
+    # -- outputs ----------------------------------------------------------
+
+    def measured_rate(self, st: CtlState, n_meas):
+        """Admitted tasks per in-window slot — the Little's-law
+        denominator once control reshapes the arrival stream (the
+        configured lam_total no longer equals what entered the system)."""
+        return st.admitted.astype(jnp.float32) / jnp.maximum(n_meas, 1.0)
+
+    def metrics(self, st: CtlState):
+        out = {
+            "ctl_offered": st.offered.astype(jnp.float32),
+            "ctl_admitted": st.admitted.astype(jnp.float32),
+            "ctl_shed": st.shed.astype(jnp.float32),
+            "ctl_shed_rate": st.shed.astype(jnp.float32)
+            / jnp.maximum(st.offered.astype(jnp.float32), 1.0),
+        }
+        adm = self.plane.admission
+        if adm is not None and adm.defers:
+            out["ctl_backlog"] = st.backlog
+        if self.has_mask:
+            out["ctl_active_mean"] = st.active_sum \
+                / jnp.maximum(st.active_n, 1.0)
+            out["ctl_active_min"] = st.active_min
+        return out
+
+
+CONTROL_METRIC_KEYS = ("ctl_offered", "ctl_admitted", "ctl_shed",
+                       "ctl_shed_rate", "ctl_backlog", "ctl_active_mean",
+                       "ctl_active_min")

@@ -99,7 +99,7 @@ def push_task(s: PandasState, m_star: jnp.ndarray, tier_m: jnp.ndarray,
 
 def route_one(s: PandasState, key: jax.Array, task: jnp.ndarray,
               active: jnp.ndarray, est: jnp.ndarray,
-              ancestors: jnp.ndarray) -> PandasState:
+              ancestors: jnp.ndarray, server_mask=None) -> PandasState:
     """Route a single arrival against the live workloads (estimated rates).
 
     Tie-break: among minimal scores, prefer the faster tier (then random).
@@ -108,10 +108,17 @@ def route_one(s: PandasState, key: jax.Array, task: jnp.ndarray,
     fleet), which no real scheduler does and which inverts the Fig. 1
     ordering at sub-critical load — see EXPERIMENTS.md §Reproduction.  The
     infinitesimal rate preference only discriminates exact ties.
+
+    ``server_mask`` ((M,) bool, autoscaling seam) is a Python-level
+    option: None compiles the exact classic program; a mask sends
+    descaled servers' scores to +inf so they take no new work (their
+    queues keep draining through the service phase).
     """
     tier_m = loc.server_tiers(task, ancestors)  # (M,) tier of each server
     est_rate = jnp.take_along_axis(est, tier_m[:, None], axis=1)[:, 0]
     score = workload(s, est) / est_rate - est_rate * 1e-6
+    if server_mask is not None:
+        score = jnp.where(server_mask, score, jnp.inf)
     m_star = loc.random_argmin(key, score)
     return push_task(s, m_star, tier_m, active)
 
@@ -160,10 +167,11 @@ def serve_and_schedule(s: PandasState, k_serve: jax.Array,
 
 def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
               active: jnp.ndarray, est: jnp.ndarray, true_rates: jnp.ndarray,
-              ancestors: jnp.ndarray):
+              ancestors: jnp.ndarray, server_mask=None):
     """One time slot: arrivals -> service completions -> scheduling.
 
-    Returns (state, completions_this_slot).
+    Returns (state, completions_this_slot).  ``server_mask=None`` (the
+    default) compiles the exact classic step; see `route_one`.
     """
     anc = loc.as_ancestors(ancestors)
     k_route, k_serve = jax.random.split(key)
@@ -172,7 +180,7 @@ def slot_step(s: PandasState, key: jax.Array, types: jnp.ndarray,
     # Sequential routing of the slot's arrivals (workloads update in-slot).
     def body(i, st):
         return route_one(st, jax.random.fold_in(k_route, i), types[i],
-                         active[i], est, anc)
+                         active[i], est, anc, server_mask=server_mask)
     s = jax.lax.fori_loop(0, n_arr, body, s)
 
     return serve_and_schedule(s, k_serve, true_rates)
@@ -188,12 +196,15 @@ class BalancedPandasPolicy(SlotPolicy):
     """
 
     name = "balanced_pandas"
+    supports_server_mask = True
 
     def init_state(self, topo: loc.Topology, **opts) -> PandasState:
         return init_state(topo)
 
-    def slot_step(self, s, key, types, active, est, true_rates, ancestors):
-        return slot_step(s, key, types, active, est, true_rates, ancestors)
+    def slot_step(self, s, key, types, active, est, true_rates, ancestors,
+                  server_mask=None):
+        return slot_step(s, key, types, active, est, true_rates, ancestors,
+                         server_mask=server_mask)
 
     def num_in_system(self, s: PandasState) -> jnp.ndarray:
         return num_in_system(s)

@@ -106,6 +106,16 @@ class SlotPolicy(abc.ABC):
     """
 
     name: str = ""
+    #: whether slot_step accepts a ``server_mask=`` kwarg ((M,) bool,
+    #: True = routable) — the autoscaling seam (`repro.control`): masked
+    #: servers take no NEW work but keep draining their queues.
+    supports_server_mask: bool = False
+    #: whether slot_step accepts a ``signals=`` kwarg of in-scan telemetry
+    #: readings (SLO-conditioned policies).  Such policies are the
+    #: documented exception to the telemetry-purity invariant: enabling
+    #: telemetry deliberately changes their sample path.  Without signals
+    #: they must degrade to a signal-free base policy bitwise.
+    uses_signals: bool = False
 
     @abc.abstractmethod
     def init_state(self, topo, **opts):
@@ -177,6 +187,9 @@ class Router(abc.ABC):
                 f"fleet topology has {self.num_tiers} tiers")
         self.estimator = estimator
         self.rng = np.random.default_rng(seed)
+        # (M,) bool routable mask (autoscaling seam): masked-out workers
+        # receive no NEW work at route time but drain what they hold.
+        self.active_mask = np.ones(spec.num_workers, bool)
 
     # -- estimated rates ----------------------------------------------------
     def _est(self) -> np.ndarray:
@@ -203,6 +216,19 @@ class Router(abc.ABC):
         """(M,) tasks queued per worker (0s for global-queue routers)."""
         return np.zeros(self.spec.num_workers)
 
+    def set_active(self, mask: Sequence[bool]) -> None:
+        """Install the routable-worker mask (autoscaling seam).  At least
+        one worker must stay active; routers fall back to the full fleet
+        for a task whose every candidate is masked (better a remote
+        assignment than a stuck task)."""
+        m = np.asarray(mask, bool)
+        if m.shape != (self.spec.num_workers,):
+            raise ValueError(f"active mask must have shape "
+                             f"({self.spec.num_workers},), got {m.shape}")
+        if not m.any():
+            raise ValueError("active mask must keep at least one worker")
+        self.active_mask = m
+
 
 # ---------------------------------------------------------------------------
 # Registries
@@ -221,6 +247,7 @@ _BUILTIN_MODULES = (
     "repro.core.fifo",
     "repro.core.pandas_po2",
     "repro.core.blind_pandas",
+    "repro.core.slo_pandas",
     "repro.core.cluster",
 )
 _builtins_loaded = False

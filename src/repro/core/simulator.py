@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.control import ControlLike, resolve_control
 from repro.core import locality as loc
 from repro.core.policy import PolicyLike, make_policy
 from repro import workloads as wl
@@ -137,7 +138,8 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
                scenario: wl.ScenarioLike = None,
                placement: PlacementLike = None,
                replication: ReplicationLike = None,
-               telemetry: TelemetryLike = None):
+               telemetry: TelemetryLike = None,
+               control: ControlLike = None):
     """Returns jit-able run(lam_total, est(M,3), seed) -> metrics dict.
 
     `scenario` (name / ScenarioConfig / Scenario; None -> "static") compiles
@@ -168,6 +170,22 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
     step, bitwise); when on, the recorder consumes no random bits, so the
     sample path is still bitwise-identical — only new metrics keys appear
     (both facts pinned in tests/test_telemetry.py).
+
+    `control` (None / name / ControlConfig / Controller / sequence;
+    `repro.control`) engages the control plane: load generation reshapes
+    the offered rate, admission trims the fixed-shape arrival lane mask
+    BEFORE routing (shed tasks never touch a queue or the telemetry
+    sojourn pairing), and autoscaling hands mask-aware policies a
+    per-slot (M,) routable-server mask (descaled servers drain — distinct
+    from the replication ``alive`` track, where dead servers stop serving
+    and lose replicas).  ``None`` compiles nothing: the exact pre-control
+    step, bitwise for every policy (pinned in tests/test_control.py).
+    When engaged, ``ctl_*`` metrics join the output and ``mean_delay``'s
+    Little's-law denominator switches from the configured rate to the
+    MEASURED admitted rate (the configured lam no longer equals what
+    entered the system).  SLO-conditioned policies (``uses_signals``)
+    additionally receive the recorder's live p99 each slot when
+    ``telemetry=`` is on.
     """
     policy = make_policy(policy_like)
     topo, true_rates = cfg.topo, cfg.true_rates
@@ -197,6 +215,27 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
         tel = SimTelemetry(as_telemetry_config(telemetry), cfg.horizon,
                            cfg.warmup, topo.num_servers, cfg.max_arrivals,
                            tuple(tel_tracks))
+    # Control plane (repro.control): None compiles nothing — the exact
+    # pre-control step (bitwise).  Engaged, its state rides the scan carry
+    # between the replication and telemetry slices.
+    plane = resolve_control(control)
+    ctl = None
+    if plane is not None:
+        ctl = plane.build_sim(topo, cfg, sched,
+                              float(np.asarray(true_rates.values)[0]))
+        if ctl.has_mask and not policy.supports_server_mask:
+            raise ValueError(
+                f"control plane {plane.describe()!r} autoscales, but policy "
+                f"{policy.name!r} does not accept a server mask "
+                f"(supports_server_mask=False); drop the autoscale "
+                f"controller or pick a mask-aware policy")
+    uses_signals = bool(getattr(policy, "uses_signals", False)) \
+        and tel is not None
+    # Carry layout: (state, mean_n, n_meas, completions)[+rep][+ctl][+tel].
+    i_rep = 4 if rep_sim is not None else None
+    i_ctl = 4 + (rep_sim is not None) if ctl is not None else None
+    i_tel = 4 + (rep_sim is not None) + (ctl is not None) \
+        if tel is not None else None
     # Little's-law denominator: the offered rate over the measurement
     # window is lam_total x the window's mean arrival multiplier (exactly
     # 1.0 for the static scenario and any unit-mean modulation).
@@ -211,24 +250,46 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             knobs = wl.slot_knobs(sched, t)
             key_t = jax.random.fold_in(base, t)
             k_arr, k_algo = jax.random.split(key_t)
+            if tel is not None or ctl is not None:
+                # observed BEFORE this slot's arrivals/service touch state
+                n_prev = policy.num_in_system(state).astype(jnp.int32)
+            if ctl is not None:
+                # loadgen shapes the offered rate (closed loop gates on the
+                # POLICY's in-system count, exact even under policy drops)
+                lam_t, arr_cap = ctl.offered_lam(n_prev, lam_total, knobs)
+            else:
+                lam_t = lam_total * knobs.lam_mult
             # Arrival stream depends only on (seed, t) and the scenario:
             # identical across policies -> paired comparisons (common
-            # random numbers).
+            # random numbers).  The control plane consumes no random bits,
+            # so CRN coupling survives engagement too.
             types, active = loc.sample_arrivals_at(
-                k_arr, rack_of, lam_total * knobs.lam_mult, knobs.p_hot,
+                k_arr, rack_of, lam_t, knobs.p_hot,
                 knobs.hot_rack, cfg.max_arrivals, knobs.rack_weights,
                 type_sampler=sample_types)
+            server_mask = None
+            if ctl is not None:
+                # admission trims the lane mask BEFORE routing; autoscale
+                # computes this slot's routable-server mask
+                ctl_state, active, server_mask = ctl.pre(
+                    carry[i_ctl], active, arr_cap, n_prev, lam_t,
+                    t >= cfg.warmup)
             true_mk = true_k[None, :] * knobs.rate_mult
             if rep_sim is not None:
                 alive = knobs.alive if knobs.alive is not None \
                     else jnp.ones(topo.num_servers, jnp.float32)
                 rep_state, fg_mult = rep_sim.step(
-                    carry[4], alive, key_t, active, t >= cfg.warmup)
+                    carry[i_rep], alive, key_t, active, t >= cfg.warmup)
                 true_mk = true_mk * fg_mult[:, None]
-            if tel is not None:
-                n_prev = policy.num_in_system(state).astype(jnp.int32)
+            step_kw = {}
+            if server_mask is not None:
+                step_kw["server_mask"] = server_mask
+            if uses_signals:
+                step_kw["signals"] = {
+                    "delay_p99": tel.live_quantile(carry[i_tel], 0.99)}
             state, compl = policy.slot_step(state, k_algo, types, active,
-                                            est, true_mk, ancestors)
+                                            est, true_mk, ancestors,
+                                            **step_kw)
             n = policy.num_in_system(state).astype(jnp.float32)
             in_window = (t >= cfg.warmup).astype(jnp.float32)
             n_meas = n_meas + in_window
@@ -237,6 +298,8 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             out_carry = (state, mean_n, n_meas, completions)
             if rep_sim is not None:
                 out_carry += (rep_state,)
+            if ctl is not None:
+                out_carry += (ctl_state,)
             if tel is not None:
                 # admissions inferred from the state delta, so arrivals the
                 # policy rejected (FIFO's drops) never enter the sojourn
@@ -248,13 +311,16 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
                         alive > 0.5).astype(jnp.float32)
                     extras["open_lanes"] = jnp.sum(
                         rep_state.lane_left > 0.0).astype(jnp.float32)
-                out_carry += (tel.record(carry[-1], t, n_now - n_prev + compl,
+                out_carry += (tel.record(carry[i_tel], t,
+                                         n_now - n_prev + compl,
                                          compl, n_now, extras),)
             return out_carry, ()
 
         carry0 = (init(), jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0))
         if rep_sim is not None:
             carry0 += (rep_sim.init(),)
+        if ctl is not None:
+            carry0 += (ctl.init(),)
         if tel is not None:
             carry0 += (tel.init(),)
         carry, _ = jax.lax.scan(step, carry0, jnp.arange(cfg.horizon))
@@ -269,28 +335,43 @@ def _build_run(policy_like: PolicyLike, cfg: SimConfig,
             "throughput": completions / jnp.maximum(n_meas, 1.0),
             "final_n": policy.num_in_system(state).astype(jnp.float32),
         }
+        if ctl is not None:
+            # Control reshapes the arrival stream (closed loop, shedding),
+            # so Little's law must divide by what actually ENTERED the
+            # system: the measured in-window admitted rate.
+            adm_rate = ctl.measured_rate(carry[i_ctl], n_meas)
+            out["mean_delay"] = jnp.where(adm_rate > 0, mean_n / adm_rate,
+                                          jnp.nan)
         _merge_metrics(out, policy.extra_metrics(state),
                        "SlotPolicy.extra_metrics")
         if rep_sim is not None:
-            _merge_metrics(out, rep_sim.metrics(carry[4]),
+            _merge_metrics(out, rep_sim.metrics(carry[i_rep]),
                            "replication lifecycle")
+        if ctl is not None:
+            _merge_metrics(out, ctl.metrics(carry[i_ctl]), "control plane")
         if tel is not None:
-            _merge_metrics(out, tel.metrics(carry[-1]), "telemetry")
+            _merge_metrics(out, tel.metrics(carry[i_tel]), "telemetry")
         return out
 
     return run
 
 
 def _fleet_engaged(fleet, policy, cfg, scenario, placement, replication,
-                   telemetry) -> bool:
+                   telemetry, control=None) -> bool:
     """Resolve the ``fleet=`` seam shared by simulate/sweep.
 
     ``False`` -> dense, always.  ``True`` / a FleetConfig -> fleet path,
     raising if the configuration has no fleet step.  ``None`` (default)
     -> auto: fleet only when supported AND the topology is at least
     ``sharding.sim.FLEET_AUTO_THRESHOLD`` servers, so every paper-scale
-    run keeps the faithful (bitwise-pinned) dense path.
+    run keeps the faithful (bitwise-pinned) dense path.  A control plane
+    always pins the dense path (the fleet step has no control seam yet).
     """
+    if control is not None:
+        if fleet is True or (fleet is not None and fleet is not False):
+            raise ValueError("fleet=True is not supported with control=; "
+                             "the fleet step has no control-plane seam yet")
+        return False
     if fleet is False:
         return False
     from repro.sharding import sim as fleet_sim  # lazy: avoids a cycle
@@ -310,26 +391,30 @@ def simulate(policy: PolicyLike, cfg: SimConfig, lam_total: float,
              placement: PlacementLike = None,
              replication: ReplicationLike = None,
              telemetry: TelemetryLike = None,
+             control: ControlLike = None,
              fleet=None) -> Dict[str, Any]:
     """Single-configuration run (jit-compiled).  ``lam_total == 0`` yields
     ``mean_delay = NaN`` (Little's law is undefined); negative loads are
     rejected here.  Scalar metrics come back as floats; array-valued
     telemetry metrics (histograms, the series) as numpy arrays.
 
-    ``fleet`` selects the fleet-scale backend (`repro.sharding.sim`):
-    ``None`` auto-engages it for supported configurations at
-    >= 1024 servers, ``True``/`FleetConfig` forces it (raising when the
-    configuration has no fleet step), ``False`` pins the dense path.
+    ``control`` engages the control plane (`repro.control`: load
+    generation, admission, autoscaling); ``None`` compiles the exact
+    pre-control program.  ``fleet`` selects the fleet-scale backend
+    (`repro.sharding.sim`): ``None`` auto-engages it for supported
+    configurations at >= 1024 servers, ``True``/`FleetConfig` forces it
+    (raising when the configuration has no fleet step), ``False`` pins
+    the dense path.
     """
     if lam_total < 0:
         raise ValueError(f"lam_total must be >= 0, got {lam_total}")
     if _fleet_engaged(fleet, policy, cfg, scenario, placement, replication,
-                      telemetry):
+                      telemetry, control):
         from repro.sharding import sim as fleet_sim
         return fleet_sim.fleet_simulate(policy, cfg, lam_total, est, seed,
                                         fleet)
     run = jax.jit(_build_run(policy, cfg, scenario, placement, replication,
-                             telemetry))
+                             telemetry, control))
     out = run(jnp.float32(lam_total), jnp.asarray(est, jnp.float32),
               jnp.asarray(seed, jnp.uint32))
     res: Dict[str, Any] = {}
@@ -345,6 +430,7 @@ def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
           placement: PlacementLike = None,
           replication: ReplicationLike = None,
           telemetry: TelemetryLike = None,
+          control: ControlLike = None,
           fleet=None) -> Dict[str, np.ndarray]:
     """Full cartesian sweep, vmapped: results have shape (L, E, S).
 
@@ -360,12 +446,12 @@ def sweep(policy: PolicyLike, cfg: SimConfig, lam_grid: np.ndarray,
     if np.any(np.asarray(lam_grid) < 0):
         raise ValueError(f"lam_grid must be >= 0, got {lam_grid}")
     if _fleet_engaged(fleet, policy, cfg, scenario, placement, replication,
-                      telemetry):
+                      telemetry, control):
         from repro.sharding import sim as fleet_sim
         return fleet_sim.fleet_sweep(policy, cfg, lam_grid, est_stack,
                                      seeds, fleet)
     run = _build_run(policy, cfg, scenario, placement, replication,
-                     telemetry)
+                     telemetry, control)
     f = jax.vmap(jax.vmap(jax.vmap(run, (None, None, 0)), (None, 0, None)),
                  (0, None, None))
     f = jax.jit(f)

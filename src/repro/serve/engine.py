@@ -45,13 +45,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.control import ControlLike, resolve_control, scale_priority
 from repro.core.cluster import tier_of
 from repro.core.estimator import EwmaRateEstimator
 from repro.core.locality import Topology
 from repro.core.policy import make_router
 from repro.placement import PlacementLike, make_placement
 from repro.replication import ReplicationLike, make_replication
-from repro.telemetry import CLOCK_UNIT_US, EventRecorder
+from repro.telemetry import (CLOCK_UNIT_US, EventRecorder,
+                             percentiles_from_hist)
 from repro.workloads import (ScenarioLike, Trace, host_playback,
                              make_scenario, trace_from_arrivals)
 
@@ -124,6 +126,16 @@ class EngineConfig:
     # durations are measured wall-clock for kernel-vs-host attribution).
     # None -> no events recorded, zero overhead on the hot path.
     tracer: Optional[EventRecorder] = None
+    # control plane (repro.control): admission sheds requests at submit
+    # time (finish_time = -1.0, never routed), autoscaling parks replicas
+    # off the routing mask driven by the measured sojourn p95.  None ->
+    # no control, the exact pre-control engine.
+    control: ControlLike = None
+    # host-side sojourn histogram (submit -> finish, engine steps): same
+    # fixed-bin + overflow layout as the in-scan recorder, feeding
+    # `sojourn_percentiles()` and the autoscaler's p95 signal.
+    sojourn_hist_bins: int = 512
+    sojourn_hist_max: float = 512.0
 
 
 class Replica:
@@ -256,6 +268,23 @@ class ServingEngine:
                 self.spec, self.placement, ecfg.num_prefixes, 3,
                 ecfg.seed, prior)
         self.lost_routes = 0  # arrivals whose prefix had no live replica
+        # Host control plane (repro.control): admission + autoscaling on
+        # the engine-step clock.  None -> the exact pre-control paths.
+        plane = resolve_control(ecfg.control)
+        self.control = None if plane is None else \
+            plane.build_host(self.spec, float(prior[0]), seed=ecfg.seed)
+        # Host sojourn histogram (submit -> finish, steps): fixed bins +
+        # overflow, mirroring the in-scan recorder's layout so the same
+        # percentile estimator reads both.
+        if ecfg.sojourn_hist_bins < 1 or ecfg.sojourn_hist_max <= 0:
+            raise ValueError("sojourn_hist_bins must be >= 1 and "
+                             "sojourn_hist_max > 0")
+        self._soj_width = float(ecfg.sojourn_hist_max) / ecfg.sojourn_hist_bins
+        self.sojourn_hist = np.zeros(ecfg.sojourn_hist_bins + 1, np.int64)
+        self.completed = 0
+        # Autoscale parking: rank r server is the r-th kept on shrink.
+        self._scale_rank = scale_priority(self.spec)
+        self._parked = np.zeros(n_rep, bool)
         self.steps = 0
         self.assign_tiers = {t: 0 for t in range(self.spec.num_tiers)}
         # engine-step index of every submit, for trace export (recorded_trace)
@@ -278,11 +307,57 @@ class ServingEngine:
 
     def submit(self, req: Request) -> None:
         req.arrival = time.monotonic()
+        req._submit_step = self.steps  # type: ignore[attr-defined]
         self.arrival_log.append(self.steps)
+        if self.control is not None and \
+                not self.control.admit(self.steps, self.in_system):
+            # Shed BEFORE routing: the request never touches a queue.
+            # finish_time = -1.0 marks it settled (run_until_drained waits
+            # on == 0.0) without ever having started.
+            req.finish_time = -1.0
+            if self.tracer is not None:
+                self.tracer.instant("shed", cat="engine", ts_us=self._ts(),
+                                    rid=req.rid, prefix=req.prefix_id)
+            return
         self.queue.append(req)
         if self.tracer is not None:
             self.tracer.instant("submit", cat="engine", ts_us=self._ts(),
                                 rid=req.rid, prefix=req.prefix_id)
+
+    @property
+    def in_system(self) -> int:
+        """Admitted-but-unfinished requests (queued, waiting, or decoding)
+        — the engine-side conservation counter: admitted == completed +
+        in_system at every step."""
+        if self.control is not None:
+            return self.control.admitted - self.completed
+        return len(self.arrival_log) - self.completed
+
+    def _note_finished(self, finished: List[Request]) -> None:
+        """Sojourn accounting for requests that finished this step
+        (submit -> finish on the engine-step clock), shared by the traced
+        and untraced decode branches."""
+        for r in finished:
+            self.completed += 1
+            s = getattr(r, "_submit_step", None)
+            if s is None:
+                continue
+            b = min(int((self.steps - s) / self._soj_width),
+                    len(self.sojourn_hist) - 1)
+            self.sojourn_hist[b] += 1
+
+    def sojourn_percentiles(self, qs=(0.5, 0.95, 0.99)) -> np.ndarray:
+        """Sojourn quantiles (engine steps) from the host histogram —
+        upper-bin-edge estimates, exactly like the in-scan recorder (NaN
+        before the first completion, inf from the overflow bin)."""
+        return percentiles_from_hist(self.sojourn_hist, self._soj_width, qs)
+
+    @property
+    def sojourn_overflow_frac(self) -> float:
+        """Fraction of completions whose sojourn exceeded
+        ``sojourn_hist_max`` (quantiles landing there report inf)."""
+        total = int(self.sojourn_hist.sum())
+        return float(self.sojourn_hist[-1]) / max(total, 1)
 
     def recorded_trace(self, num_intervals: int = 32,
                        name: str = "engine") -> Trace:
@@ -336,6 +411,11 @@ class ServingEngine:
 
     def _admit(self) -> None:
         for i, rep in enumerate(self.replicas):
+            # A parked (descaled) replica drains its already-routed queue,
+            # then stops claiming — it must not pull from the global
+            # deferred queue or steal other replicas' work.
+            if self._parked[i] and not self.waiting[i]:
+                continue
             while rep.free_slots():
                 claim = self.router.claim(i)
                 if claim is None:
@@ -378,7 +458,7 @@ class ServingEngine:
         self._admit()
         if self.tracer is None:
             for rep in self.replicas:
-                rep.decode_once()
+                self._note_finished(rep.decode_once())
         else:
             self.tracer.counter(
                 "queued", len(self.queue) + len(self.pending)
@@ -387,6 +467,7 @@ class ServingEngine:
                 active = sum(r is not None for r in rep.slot_req)
                 t0 = self.tracer.now_us()
                 finished = rep.decode_once()
+                self._note_finished(finished)
                 if active:
                     # virtual-clock placement, wall-clock width: the dur
                     # is real kernel-dispatch time attributed to this step
@@ -401,6 +482,18 @@ class ServingEngine:
                         (self.steps - a + 1) * CLOCK_UNIT_US, cat="request",
                         tid=r.replica + 1, rid=r.rid, tier=r.tier,
                         tokens=len(r.generated or ()))
+        if self.control is not None and self.control.autoscaler is not None:
+            # Reactive autoscaling: feed the measured sojourn p95; a new
+            # target reshapes the routing mask (parked replicas drain).
+            p95 = float(self.sojourn_percentiles((0.95,))[0])
+            target = self.control.observe(self.steps, p95)
+            if target is not None:
+                mask = self._scale_rank < target
+                self.router.set_active(mask)
+                self._parked = ~mask
+                if self.tracer is not None:
+                    self.tracer.instant("autoscale", cat="engine",
+                                        ts_us=self._ts(), target=int(target))
         self.steps += 1
 
     def run_until_drained(self, all_requests: Sequence[Request],

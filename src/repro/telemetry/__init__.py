@@ -22,14 +22,17 @@ error bound, and the trace-event schema.
 
 from repro.telemetry.events import (CLOCK_UNIT_US, EventRecorder, load_trace,
                                     maybe_span, validate_chrome_trace)
-from repro.telemetry.recorder import (TELEMETRY_METRIC_KEYS, SimTelemetry,
+from repro.telemetry.recorder import (OVERFLOW_WARN_FRAC,
+                                      TELEMETRY_METRIC_KEYS, SimTelemetry,
                                       TelemetryConfig, TelemetryLike,
                                       TelState, as_telemetry_config,
-                                      fcfs_sojourns, percentiles_from_hist)
+                                      fcfs_sojourns, maybe_warn_overflow,
+                                      percentiles_from_hist)
 
 __all__ = [
     "CLOCK_UNIT_US", "EventRecorder", "load_trace", "maybe_span",
-    "validate_chrome_trace", "TELEMETRY_METRIC_KEYS", "SimTelemetry",
-    "TelemetryConfig", "TelemetryLike", "TelState", "as_telemetry_config",
-    "fcfs_sojourns", "percentiles_from_hist",
+    "validate_chrome_trace", "OVERFLOW_WARN_FRAC", "TELEMETRY_METRIC_KEYS",
+    "SimTelemetry", "TelemetryConfig", "TelemetryLike", "TelState",
+    "as_telemetry_config", "fcfs_sojourns", "maybe_warn_overflow",
+    "percentiles_from_hist",
 ]

@@ -94,9 +94,13 @@ TelemetryLike = Union[None, bool, TelemetryConfig]
 
 #: metric keys `SimTelemetry.metrics` adds to the simulator output dict
 TELEMETRY_METRIC_KEYS = (
-    "delay_p50", "delay_p95", "delay_p99", "delay_hist", "queue_len_hist",
-    "series", "telemetry_dropped", "telemetry_unmatched",
+    "delay_p50", "delay_p95", "delay_p99", "delay_hist", "delay_overflow_frac",
+    "queue_len_hist", "series", "telemetry_dropped", "telemetry_unmatched",
 )
+
+#: overflow fraction past which the summary warns (sojourn tails beyond
+#: ``hist_max`` clamp any quantile landing there to inf)
+OVERFLOW_WARN_FRAC = 0.01
 
 
 def as_telemetry_config(spec: TelemetryLike) -> TelemetryConfig:
@@ -236,11 +240,22 @@ class SimTelemetry:
             "delay_p95": _hist_quantile(hist, w, 0.95),
             "delay_p99": _hist_quantile(hist, w, 0.99),
             "delay_hist": hist,
+            "delay_overflow_frac": hist[-1] / jnp.maximum(jnp.sum(hist), 1.0),
             "queue_len_hist": st.qlen_hist.astype(f32),
             "series": st.series,
             "telemetry_dropped": st.dropped.astype(f32),
             "telemetry_unmatched": st.unmatched.astype(f32),
         }
+
+    def live_quantile(self, st: TelState, q: float) -> jnp.ndarray:
+        """Running sojourn quantile over everything binned SO FAR — the
+        in-scan signal SLO-conditioned policies read mid-run.  NaN until
+        the first completion is binned (comparisons are False -> no
+        breach) and inf while the quantile sits in the overflow bin (any
+        finite target reads as breached — correct: the tail has already
+        passed ``hist_max``)."""
+        return _hist_quantile(st.delay_hist.astype(jnp.float32),
+                              jnp.float32(self.cfg.bin_width), q)
 
 
 def _hist_quantile(hist: jnp.ndarray, width, q: float) -> jnp.ndarray:
@@ -270,6 +285,27 @@ def percentiles_from_hist(counts: np.ndarray, bin_width: float,
         idx = int(np.argmax(c >= q * total))
         out[i] = np.inf if idx >= len(counts) - 1 else (idx + 1) * bin_width
     return out
+
+
+def maybe_warn_overflow(overflow_frac: float, cfg: TelemetryConfig) -> bool:
+    """Warn (stdlib `warnings`) when more than `OVERFLOW_WARN_FRAC` of the
+    binned sojourns landed in the overflow bin — at that point any
+    quantile >= 1 - overflow_frac reports inf rather than a number, and
+    the histogram mean is silently clamped.  Suggests a 4x ``hist_max``
+    (same bin count: 4x coarser bins, still a documented error bound).
+    Returns whether it warned, so drivers/tests can assert on it."""
+    frac = float(overflow_frac)
+    if not np.isfinite(frac) or frac <= OVERFLOW_WARN_FRAC:
+        return False
+    import warnings
+    warnings.warn(
+        f"{100.0 * frac:.1f}% of recorded sojourns exceeded "
+        f"hist_max={cfg.hist_max:g} (overflow bin); percentiles at or above "
+        f"q={1.0 - frac:.3f} report inf. Rerun with a larger histogram "
+        f"range, e.g. TelemetryConfig(hist_max={4.0 * cfg.hist_max:g}, "
+        f"hist_bins={cfg.hist_bins}).",
+        RuntimeWarning, stacklevel=2)
+    return True
 
 
 def fcfs_sojourns(admitted: np.ndarray,

@@ -90,6 +90,12 @@ class Segment:
     down_racks   -- rack ids whose every server is dead during this segment
                     (ids taken mod rack count at compile; resolved through
                     the topology's ``rack_of`` map)
+    users_mult   -- multiplier on the closed-loop user population
+                    (`repro.control`'s ``closed_loop`` load generator) —
+                    the closed-loop analogue of ``lam_mult``.  Ignored by
+                    open-loop runs, so the default 1.0 keeps every
+                    pre-control schedule bitwise (the track is only
+                    materialized when some segment moves it).
     """
 
     start: float
@@ -101,6 +107,7 @@ class Segment:
     rack_weights: Optional[Tuple[float, ...]] = None
     down_servers: Tuple[int, ...] = ()
     down_racks: Tuple[int, ...] = ()
+    users_mult: float = 1.0
 
     def __post_init__(self):
         if not 0.0 <= self.start < 1.0:
@@ -129,6 +136,8 @@ class Segment:
                 raise ValueError(f"{field} must be non-negative server/rack "
                                  f"ids, got {ids}")
             object.__setattr__(self, field, tuple(int(i) for i in ids))
+        if self.users_mult < 0.0:
+            raise ValueError(f"users_mult must be >= 0, got {self.users_mult}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -357,6 +366,9 @@ class Schedule(NamedTuple):
     rack_weights: Optional[jnp.ndarray] = None  # (S, R) f32 arrival weights
     alive: Optional[jnp.ndarray] = None  # (S, M) f32 1=alive, 0=dead; None
     #                                      when no segment declares failures
+    users_mult: Optional[jnp.ndarray] = None  # (S,) f32 closed-loop user
+    #                                      population multiplier; None when
+    #                                      every segment keeps the default
 
 
 class SlotKnobs(NamedTuple):
@@ -368,6 +380,16 @@ class SlotKnobs(NamedTuple):
     rate_mult: jnp.ndarray  # (M, K) f32
     rack_weights: Optional[jnp.ndarray] = None  # (R,) f32 or None
     alive: Optional[jnp.ndarray] = None  # (M,) f32 or None
+    users_mult: Optional[jnp.ndarray] = None  # () f32 or None
+
+
+def _users_track(scn: Scenario) -> Optional[np.ndarray]:
+    """(S,) closed-loop user-population multipliers, or None when every
+    segment keeps the default 1.0 (the compile-time fact both projections
+    branch on — open-loop schedules carry no users track at all)."""
+    if all(s.users_mult == 1.0 for s in scn.segments):
+        return None
+    return np.array([s.users_mult for s in scn.segments], np.float32)
 
 
 def compile_schedule(scn: Scenario, topo, horizon: int,
@@ -381,6 +403,7 @@ def compile_schedule(scn: Scenario, topo, horizon: int,
     knots = np.floor(starts * horizon).astype(np.int32)
     knots[0] = 0
     rate = server[:, :, None] * tier[:, None, :]  # (S, M, K)
+    users = _users_track(scn)
     return Schedule(
         knots=jnp.asarray(knots),
         lam_mult=jnp.asarray(lam),
@@ -389,6 +412,7 @@ def compile_schedule(scn: Scenario, topo, horizon: int,
         rate_mult=jnp.asarray(rate),
         rack_weights=None if weights is None else jnp.asarray(weights),
         alive=None if alive is None else jnp.asarray(alive, jnp.float32),
+        users_mult=None if users is None else jnp.asarray(users),
     )
 
 
@@ -404,7 +428,9 @@ def slot_knobs(sched: Schedule, t: jnp.ndarray) -> SlotKnobs:
                      hot_rack=sched.hot_rack[i], rate_mult=sched.rate_mult[i],
                      rack_weights=None if sched.rack_weights is None
                      else sched.rack_weights[i],
-                     alive=None if sched.alive is None else sched.alive[i])
+                     alive=None if sched.alive is None else sched.alive[i],
+                     users_mult=None if sched.users_mult is None
+                     else sched.users_mult[i])
 
 
 def mean_lam_mult_over(sched: Schedule, start_slot: int,
@@ -454,6 +480,7 @@ class HostPlayback:
     tier_mult: np.ndarray    # (S, K)
     server_mult: np.ndarray  # (S, M)
     alive: Optional[np.ndarray] = None  # (S, M) bool; None = no failures
+    users_mult: Optional[np.ndarray] = None  # (S,); None = no users track
 
     def _seg(self, t: float) -> int:
         u = (float(t) % self.horizon) / self.horizon
@@ -474,6 +501,13 @@ class HostPlayback:
 
     def lam_mult_at(self, t: float) -> float:
         return float(self.lam_mult[self._seg(t)])
+
+    def users_mult_at(self, t: float) -> float:
+        """Closed-loop user-population multiplier at time `t` (1.0 for
+        scenarios without a users track)."""
+        if self.users_mult is None:
+            return 1.0
+        return float(self.users_mult[self._seg(t)])
 
     def rate_mult_at(self, t: float, worker: int,
                      tier: Optional[int] = None) -> float:
@@ -508,7 +542,8 @@ def host_playback(scn: Scenario, num_workers: int, horizon: float,
         scn, num_workers, num_racks=1, base_p_hot=0.5, num_tiers=num_tiers,
         materialize_weights=False, rack_of=rack_of)
     return HostPlayback(horizon=float(horizon), starts=starts, lam_mult=lam,
-                        tier_mult=tier, server_mult=server, alive=alive)
+                        tier_mult=tier, server_mult=server, alive=alive,
+                        users_mult=_users_track(scn))
 
 
 def arrival_steps(playback: HostPlayback, n_requests: int,

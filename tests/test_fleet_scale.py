@@ -144,6 +144,11 @@ _DENSE_PINS = {
     "priority": {"final_n": 21.0, "mean_delay": 3.612638235092163,
                  "mean_n": 28.901105880737305,
                  "throughput": 7.965555667877197},
+    # signal-free slo_pandas IS balanced_pandas (bitwise, by construction)
+    "slo_pandas": {"final_n": 15.0,
+                   "mean_delay": 3.4911115169525146,
+                   "mean_n": 27.928892135620117,
+                   "throughput": 7.965555667877197},
 }
 
 

@@ -44,7 +44,7 @@ def scripted_trace(n=40, seed=5):
 def test_every_policy_and_router_is_registered():
     assert set(available_policies()) == {
         "balanced_pandas", "jsq_maxweight", "priority", "fifo", "pandas_po2",
-        "blind_pandas"}
+        "blind_pandas", "slo_pandas"}
     assert set(available_routers()) == {
         "balanced_pandas", "jsq_maxweight", "fifo", "pandas_po2"}
 

@@ -9,7 +9,7 @@ import pytest
 
 from repro.core import locality as loc, simulator as sim
 from repro.core.balanced_pandas import BalancedPandasPolicy
-from repro.core.policy import available_policies
+from repro.core.policy import available_policies, get_policy_cls
 from repro.telemetry import (TELEMETRY_METRIC_KEYS, EventRecorder,
                              SimTelemetry, TelemetryConfig,
                              as_telemetry_config, fcfs_sojourns, load_trace,
@@ -30,6 +30,9 @@ def test_telemetry_is_pure_observation(policy):
     consumes no RNG keys and mutates no policy state, so every metric of
     the plain run is bitwise identical with the recorder compiled in —
     and with it compiled out nothing telemetry-shaped appears at all."""
+    if getattr(get_policy_cls(policy), "uses_signals", False):
+        pytest.skip(f"{policy} opts into reading telemetry signals — the "
+                    f"documented purity exception (tests/test_control.py)")
     off = sim.simulate(policy, CFG, 3.0, EST, seed=0)
     on = sim.simulate(policy, CFG, 3.0, EST, seed=0, telemetry=True)
     for k, v in off.items():
